@@ -1,0 +1,89 @@
+"""Shared benchmark machinery.
+
+Every paper figure gets one function returning rows
+(name, us_per_call, derived) where ``derived`` is the paper's metric - the
+mean performance ratio over the instance suite (usage time / Eq.(1) lower
+bound).  Scale knobs: BENCH_INSTANCES (default 12), BENCH_ITEMS (default
+2500), BENCH_REPEATS (default 1) - the paper uses 28 Azure instances; raise
+the knobs to reproduce at full scale.  If the real Azure trace is present
+under data/azure/, it is used instead of the synthetic family.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (BoxStats, get_algorithm, lognormal_predictions,
+                        lower_bound, run, uniform_predictions)
+from repro.data import load_azure_csv, make_azure_like_suite, \
+    make_huawei_like_suite
+
+N_INSTANCES = int(os.environ.get("BENCH_INSTANCES", "12"))
+N_ITEMS = int(os.environ.get("BENCH_ITEMS", "2500"))
+REPEATS = int(os.environ.get("BENCH_REPEATS", "1"))
+
+
+@functools.lru_cache()
+def azure_suite():
+    real = load_azure_csv()
+    if real is not None:
+        print("# using REAL Azure trace", flush=True)
+        return tuple(real)
+    return tuple(make_azure_like_suite(n_instances=N_INSTANCES,
+                                       n_items=N_ITEMS))
+
+
+@functools.lru_cache()
+def huawei_suite():
+    return tuple(make_huawei_like_suite(n_instances=min(N_INSTANCES, 9),
+                                        n_items=max(N_ITEMS // 2, 500)))
+
+
+@functools.lru_cache()
+def _lb(suite_name: str, idx: int) -> float:
+    suite = azure_suite() if suite_name == "azure" else huawei_suite()
+    return lower_bound(suite[idx])
+
+
+def evaluate(algorithm_factory, *, suite: str = "azure",
+             sigma: Optional[float] = None, eps: Optional[float] = None,
+             seeds: Sequence[int] = (0,)) -> Tuple[List[float], float]:
+    """Run a factory()-fresh algorithm over the suite.
+
+    Returns (per-instance mean ratios, wall seconds per run)."""
+    insts = azure_suite() if suite == "azure" else huawei_suite()
+    ratios = []
+    t0 = time.time()
+    n_runs = 0
+    for idx, inst in enumerate(insts):
+        lb = _lb(suite, idx)
+        per_seed = []
+        for s in seeds:
+            pdur = None
+            if sigma is not None:
+                pdur = lognormal_predictions(inst, sigma, seed=s)
+            elif eps is not None:
+                pdur = uniform_predictions(inst, eps, seed=s)
+            r = run(inst, algorithm_factory(), predicted_durations=pdur)
+            per_seed.append(r.ratio(lb))
+            n_runs += 1
+        ratios.append(float(np.mean(per_seed)))
+    return ratios, (time.time() - t0) / max(n_runs, 1)
+
+
+def row(name: str, secs_per_call: float, derived: float) -> str:
+    return f"{name},{secs_per_call*1e6:.0f},{derived:.4f}"
+
+
+def box_row(name: str, ratios: List[float], secs: float) -> str:
+    st = BoxStats.from_ratios(ratios)
+    return (f"{name},{secs*1e6:.0f},{st.mean:.4f}  "
+            f"# median={st.median:.3f} q1={st.q1:.3f} q3={st.q3:.3f}")
+
+
+def alg(name: str, **kw):
+    return lambda: get_algorithm(name, **kw)

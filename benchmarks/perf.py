@@ -1,0 +1,98 @@
+"""Micro/throughput benchmarks beyond the paper figures:
+
+  * Pallas kernels (interpret mode on CPU; native on TPU) vs jnp references
+  * core.jaxsim trace replay vs the Python oracle engine
+  * serving fleet placement throughput
+  * roofline summary rows from the dry-run artifacts (experiments/dryrun)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, n: int = 5) -> float:
+    fn(*args)   # compile/warm
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n
+
+
+def kernels() -> List[str]:
+    import repro.kernels.ops as ops
+    rows = []
+    impl = "auto" if jax.default_backend() == "tpu" else "ref"
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (4, 256, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (4, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (4, 256, 2, 64), jnp.float32)
+    t = _timeit(lambda: ops.flash_attention(q, k, v, impl=impl))
+    flops = 4 * 256 * 256 * 8 * 64 * 2 * 2 / 2
+    rows.append(f"perf/flash_attention_{impl},{t*1e6:.0f},{flops/t/1e9:.1f}")
+
+    qd = jax.random.normal(key, (8, 8, 64))
+    kd = jax.random.normal(key, (8, 4096, 2, 64))
+    vd = jax.random.normal(key, (8, 4096, 2, 64))
+    kl = jnp.full((8,), 4096, jnp.int32)
+    t = _timeit(lambda: ops.decode_attention(qd, kd, vd, kl, impl=impl))
+    gb = 8 * 4096 * 2 * 64 * 4 * 2 / 1e9
+    rows.append(f"perf/decode_attention_{impl},{t*1e6:.0f},{gb/t:.1f}")
+
+    rem = jnp.asarray(np.random.default_rng(0).random((4096, 5)))
+    alive = jnp.ones(4096, bool)
+    item = jnp.asarray(np.random.default_rng(1).random(5) * 0.3)
+    t = _timeit(lambda: ops.fitscore(rem, alive, item, impl=impl))
+    rows.append(f"perf/fitscore_4096bins_{impl},{t*1e6:.0f},{4096/t/1e6:.2f}")
+    return rows
+
+
+def jaxsim_vs_oracle() -> List[str]:
+    from repro.core import get_algorithm, run
+    from repro.core.jaxsim import simulate
+    from repro.data import make_azure_like_suite
+    inst = make_azure_like_suite(n_instances=1, n_items=2000)[0]
+    t0 = time.time()
+    r = run(inst, get_algorithm("first_fit"))
+    t_or = time.time() - t0
+    simulate(inst, "first_fit", max_bins=r.peak_open_bins + 8)   # compile
+    t0 = time.time()
+    j = simulate(inst, "first_fit", max_bins=r.peak_open_bins + 8)
+    t_jx = time.time() - t0
+    rows = [f"perf/oracle_engine_2k_items,{t_or*1e6:.0f},{r.usage_time:.0f}",
+            f"perf/jaxsim_2k_items,{t_jx*1e6:.0f},{j.usage_time:.0f}"]
+    return rows
+
+
+def serving_fleet() -> List[str]:
+    from repro.serving.fleet import attach_predictions, simulate_fleet, \
+        synth_requests
+    reqs = attach_predictions(synth_requests(2000), sigma=0.5)
+    rows = []
+    for pol in ["round_robin", "first_fit", "greedy", "nrt_prioritized"]:
+        t0 = time.time()
+        r = simulate_fleet(reqs, pol)
+        rows.append(f"perf/fleet_{pol},{(time.time()-t0)*1e6:.0f},"
+                    f"{r['replica_seconds']:.0f}")
+    return rows
+
+
+def roofline_summary() -> List[str]:
+    rows = []
+    for path in sorted(glob.glob("experiments/dryrun/*_16x16.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        r = rec["roofline"]
+        dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom_s if dom_s else 0.0
+        rows.append(f"roofline/{rec['arch']}/{rec['shape']},"
+                    f"{dom_s*1e6:.0f},{frac:.3f}  "
+                    f"# dominant={r['dominant']} useful={r['useful_ratio']:.2f}")
+    return rows

@@ -1,0 +1,43 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows; `derived` is the paper's metric (mean performance ratio) for
+# figure benches, throughput/quality for perf benches.
+#
+#   PYTHONPATH=src python -m benchmarks.run [--only figN] [--skip-perf]
+#   Scale knobs: BENCH_INSTANCES / BENCH_ITEMS / BENCH_REPEATS env vars.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--skip-perf", action="store_true")
+    ap.add_argument("--skip-figures", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if not args.skip_figures:
+        from . import figures
+        for fn in figures.ALL_FIGURES:
+            if args.only and args.only not in fn.__name__:
+                continue
+            for line in fn():
+                print(line, flush=True)
+    if not args.skip_perf and not args.only:
+        from . import perf
+        for group in (perf.kernels, perf.jaxsim_vs_oracle,
+                      perf.serving_fleet, perf.roofline_summary):
+            try:
+                for line in group():
+                    print(line, flush=True)
+            except Exception as e:   # keep the harness robust
+                print(f"# {group.__name__} failed: {e}", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

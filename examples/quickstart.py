@@ -1,0 +1,46 @@
+"""Quickstart: the paper in one minute.
+
+Packs a synthetic Azure-like DVBP instance with algorithms from all three
+settings and prints performance ratios vs. the Eq.(1) lower bound.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (get_algorithm, lognormal_predictions, lower_bound,
+                        run)
+from repro.data import make_azure_like_suite
+
+
+def main():
+    inst = make_azure_like_suite(n_instances=1, n_items=4000)[0]
+    lb = lower_bound(inst)
+    print(f"instance {inst.name}: {inst.n_items} VMs, d={inst.d}, "
+          f"mu={inst.mu:.0f}, LB={lb:.0f} bin-seconds\n")
+
+    print("non-clairvoyant (durations unknown):")
+    for name in ["first_fit", "mru", "next_fit", "rr_next_fit"]:
+        r = run(inst, get_algorithm(name))
+        print(f"  {r.algorithm:22s} ratio={r.ratio(lb):.3f}")
+    r = run(inst, get_algorithm("best_fit", norm="linf"))
+    print(f"  {r.algorithm:22s} ratio={r.ratio(lb):.3f}")
+
+    print("clairvoyant (durations known):")
+    for name, kw in [("nrt_prioritized", {}), ("greedy", {}),
+                     ("cbdt", {"rho": 21600.0}), ("reduced_hybrid", {})]:
+        r = run(inst, get_algorithm(name, **kw))
+        print(f"  {r.algorithm:22s} ratio={r.ratio(lb):.3f}")
+
+    print("learning-augmented (predicted durations, sigma=1):")
+    pdur = lognormal_predictions(inst, sigma=1.0, seed=1)
+    for name in ["ppe_modified", "greedy", "nrt_prioritized"]:
+        r = run(inst, get_algorithm(name), predicted_durations=pdur)
+        print(f"  {r.algorithm:22s} ratio={r.ratio(lb):.3f}")
+    for mode in ["binary", "geometric"]:
+        r = run(inst, get_algorithm("lifetime_alignment", mode=mode),
+                predicted_durations=pdur)
+        print(f"  {r.algorithm:22s} ratio={r.ratio(lb):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""End-to-end serving driver: real model replicas + DVBP placement.
+
+Boots a fleet of reduced-config ReplicaEngines (real forward passes,
+continuous batching), schedules a Poisson request stream with the paper's
+Greedy policy, and reports replica-occupancy seconds against the fleet
+simulation baselines.
+
+    PYTHONPATH=src python examples/serve_dvbp.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--requests", "200", "--policy", "nrt_prioritized",
+          "--sigma", "0.5"])
+    main(["--arch", "qwen2.5-14b", "--requests", "10", "--real",
+          "--policy", "greedy"])

@@ -1,0 +1,35 @@
+"""Assigned architecture configs (--arch <id>) + the paper's own config.
+
+Each module defines CONFIG (the exact assigned full-scale config) and
+``reduced()`` (a tiny same-family config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from ..models.config import ModelConfig
+
+ARCHS = [
+    "gemma3-12b", "qwen2.5-14b", "minitron-8b", "nemotron-4-340b",
+    "granite-moe-3b-a800m", "deepseek-v2-lite-16b", "whisper-medium",
+    "pixtral-12b", "rwkv6-1.6b", "hymba-1.5b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    mod = importlib.import_module(f".{_MODULES[name]}", __package__)
+    return mod.CONFIG
+
+
+def get_reduced_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_MODULES[name]}", __package__)
+    return mod.reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

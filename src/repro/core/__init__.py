@@ -1,0 +1,17 @@
+"""MinUsageTime Dynamic Vector Bin Packing - the paper's core contribution.
+
+Public API:
+    Instance, Arrival, PackingResult       (types)
+    run(instance, algorithm, ...)          (exact event-driven engine)
+    lower_bound(instance), span(instance)  (Eq. 1 optimum lower bound)
+    get_algorithm(name, **params)          (algorithm zoo registry)
+    lognormal_predictions / uniform_predictions (error models, §VI)
+"""
+from .types import EPS, Arrival, Instance, PackingResult  # noqa: F401
+from .engine import run  # noqa: F401
+from .lower_bound import lower_bound, span  # noqa: F401
+from .metrics import BoxStats, summarize  # noqa: F401
+from .predictions import lognormal_predictions, uniform_predictions  # noqa: F401
+from .algorithms import (ALL_ALGORITHMS, ANY_FIT, CLAIRVOYANT,  # noqa: F401
+                         LEARNING_AUGMENTED, NON_CLAIRVOYANT, REGISTRY,
+                         Algorithm, get_algorithm)

@@ -1,0 +1,16 @@
+"""DVBP algorithm zoo.  Importing this package populates the registry."""
+from .base import REGISTRY, Algorithm, get_algorithm, register  # noqa: F401
+from . import adaptive, anyfit, departure, duration, learned  # noqa: F401
+
+ALL_ALGORITHMS = sorted(REGISTRY)
+
+NON_CLAIRVOYANT = ["first_fit", "mru", "next_fit", "rr_next_fit", "best_fit"]
+CLAIRVOYANT = ["cbdt", "nrt_standard", "nrt_prioritized", "greedy", "cbd",
+               "hybrid", "reduced_hybrid", "hybrid_direct_sum",
+               "reduced_hybrid_direct_sum"]
+LEARNING_AUGMENTED = ["rcp", "ppe", "rcp_modified", "ppe_modified",
+                      "lifetime_alignment"]
+# Any Fit algorithms (never open a new bin when the item fits in an open bin)
+ANY_FIT = ["first_fit", "mru", "rr_next_fit", "best_fit_l1", "best_fit_l2",
+           "best_fit_linf", "nrt_standard", "nrt_prioritized", "greedy",
+           "la_binary", "la_geometric"]

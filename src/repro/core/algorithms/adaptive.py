@@ -1,0 +1,72 @@
+"""Adaptive policy switching - the paper's future direction (1), implemented.
+
+The paper's §VI-C finding: Prioritized NRT wins near perfect predictions,
+Greedy wins at medium error, and at high error modified PPE converges to
+First Fit (its threshold alpha/sqrt(x) grows past every aggregate).
+``AdaptiveSwitch`` monitors the maximum multiplicative prediction error over
+departed items (the same online signal PPE's guess-and-double uses - no
+extra information assumed) and routes each arrival to the strongest policy
+for the current regime:
+
+    err < low   (default 2)  -> nrt_prioritized  (aggressive; consistency)
+    err < high  (default 16) -> greedy           (conservative closing times)
+    else                     -> first_fit        (error-oblivious; what PPE
+                                                  degenerates to anyway)
+
+All three sub-policies are *pool-stateless* (they read bin state from the
+shared BinPool and keep no private structures), so switching between them
+mid-stream is exactly an Any Fit algorithm and inherits Greedy/NRT's
+(mu+2)d+1 competitive bound in each regime.  Evaluated in
+benchmarks/figures.py (fig15_adaptive); validated in tests/test_adaptive.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..types import Arrival
+from .base import Algorithm, register
+from .anyfit import FirstFit
+from .departure import Greedy, PrioritizedNRT
+
+
+@register("adaptive")
+class AdaptiveSwitch(Algorithm):
+    requires_predictions = True
+
+    def __init__(self, low: float = 2.0, high: float = 16.0):
+        assert 1.0 <= low <= high
+        self.low = low
+        self.high = high
+        self.name = f"adaptive_{low:g}_{high:g}"
+        self._subs = (PrioritizedNRT(), Greedy(), FirstFit())
+
+    def bind(self, pool, inst):
+        super().bind(pool, inst)
+        for s in self._subs:
+            s.bind(pool, inst)
+        self._err = 1.0
+        self._pdur = {}
+        self.regime_switches = 0
+        self._last = 0
+
+    def _active_index(self) -> int:
+        if self._err < self.low:
+            return 0
+        if self._err < self.high:
+            return 1
+        return 2
+
+    def select_bin(self, arr: Arrival) -> int:
+        self._pdur[arr.idx] = max(arr.pdur, 1e-12)
+        k = self._active_index()
+        if k != self._last:
+            self.regime_switches += 1
+            self._last = k
+        return self._subs[k].select_bin(arr)
+
+    def on_departed(self, item: int, idx: int, now: float, size: np.ndarray):
+        pdur = self._pdur.pop(item, None)
+        if pdur is not None:
+            rdur = float(self.inst.departures[item]
+                         - self.inst.arrivals[item])
+            self._err = max(self._err, rdur / pdur, pdur / rdur)

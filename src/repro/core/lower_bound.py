@@ -1,0 +1,44 @@
+"""Lower bound (Eq. 1) on the optimal accumulated bin usage time.
+
+    LB = integral over t of  ceil( || sum_{active r} s(r) ||_inf )  dt
+
+computed exactly by a sweep line over arrival/departure events: between two
+consecutive events the aggregate size vector is constant.  Also returns the
+time span (a second lower bound used by the competitive analyses).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .types import EPS, Instance
+
+
+def lower_bound(inst: Instance) -> float:
+    n, d = inst.sizes.shape
+    if n == 0:
+        return 0.0
+    times = np.concatenate([inst.arrivals, inst.departures])
+    deltas = np.concatenate([inst.sizes, -inst.sizes])
+    order = np.argsort(times, kind="stable")
+    times, deltas = times[order], deltas[order]
+    # Aggregate load right after each event; collapse simultaneous events.
+    agg = np.cumsum(deltas, axis=0)
+    seg_start = times[:-1]
+    seg_end = times[1:]
+    load = np.max(agg[:-1], axis=1)            # ||aggregate||_inf per segment
+    bins_needed = np.ceil(load - EPS)          # EPS kills float residue
+    bins_needed = np.maximum(bins_needed, 0.0)
+    return float(np.sum(bins_needed * (seg_end - seg_start)))
+
+
+def span(inst: Instance) -> float:
+    """Total duration in which at least one item is active."""
+    if inst.n_items == 0:
+        return 0.0
+    times = np.concatenate([inst.arrivals, inst.departures])
+    deltas = np.concatenate([np.ones(inst.n_items), -np.ones(inst.n_items)])
+    order = np.argsort(times, kind="stable")
+    times, deltas = times[order], deltas[order]
+    count = np.cumsum(deltas)
+    active = count[:-1] > 0
+    return float(np.sum((times[1:] - times[:-1])[active]))

@@ -1,0 +1,29 @@
+"""Prediction-error models for the learning-augmented setting (paper §VI-C,
+Appendix E).
+
+Log-normal: delta ~ LogNormal(mu=0, sigma); Pdur = delta * Rdur.  sigma=0 is
+perfect prediction.  Simulates rare-but-large ML prediction failures.
+
+Uniform: delta ~ U[1, eps], fair coin for under/over-estimation;
+Pdur = Rdur/delta or delta*Rdur.  eps=1 is perfect prediction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .types import Instance
+
+
+def lognormal_predictions(inst: Instance, sigma: float, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    delta = np.exp(rng.normal(0.0, sigma, inst.n_items)) if sigma > 0 else \
+        np.ones(inst.n_items)
+    return inst.durations * delta
+
+
+def uniform_predictions(inst: Instance, eps: float, seed: int = 0) -> np.ndarray:
+    assert eps >= 1
+    rng = np.random.default_rng(seed)
+    delta = rng.uniform(1.0, eps, inst.n_items)
+    over = rng.random(inst.n_items) < 0.5
+    return np.where(over, inst.durations * delta, inst.durations / delta)

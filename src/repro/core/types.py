@@ -1,0 +1,104 @@
+"""Core data types for MinUsageTime Dynamic Vector Bin Packing (DVBP).
+
+The paper (Lee & Tang, 2026) defines an instance as a set of items r with
+d-dimensional size vectors s(r) in (0, 1]^d and active intervals
+I(r) = [arrival, departure).  Bins have unit capacity <1,...,1>.
+
+We store instances as struct-of-arrays (numpy) so that the Python oracle
+engine can vectorize feasibility checks over open bins and the JAX replayer
+(`core.jaxsim`) can consume the same arrays directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# Feasibility tolerance: sizes come from normalized fractional resource
+# demands; exact-fit placements (sum == capacity) must be accepted despite
+# float rounding.  The same epsilon is used by every algorithm and by the
+# engine's post-placement capacity assertion.
+EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    """A MinUsageTime DVBP instance (struct of arrays, sorted by arrival)."""
+
+    sizes: np.ndarray      # (n, d) float64, each component in (0, 1]
+    arrivals: np.ndarray   # (n,) float64
+    departures: np.ndarray  # (n,) float64, departures > arrivals
+    name: str = "instance"
+
+    def __post_init__(self):
+        n, d = self.sizes.shape
+        assert self.arrivals.shape == (n,)
+        assert self.departures.shape == (n,)
+        if n:
+            assert np.all(self.departures > self.arrivals), "empty intervals"
+            assert np.all(self.sizes > 0), "item sizes must be positive"
+            assert np.all(self.sizes <= 1 + EPS), "item sizes must be <= capacity"
+            assert np.all(np.diff(self.arrivals) >= 0), "must be sorted by arrival"
+
+    @property
+    def n_items(self) -> int:
+        return self.sizes.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.sizes.shape[1]
+
+    @property
+    def durations(self) -> np.ndarray:
+        return self.departures - self.arrivals
+
+    @property
+    def mu(self) -> float:
+        """Max/min item duration ratio (the paper's competitive parameter)."""
+        dur = self.durations
+        return float(dur.max() / dur.min()) if len(dur) else 1.0
+
+    def sorted_by_arrival(self) -> "Instance":
+        order = np.argsort(self.arrivals, kind="stable")
+        return Instance(self.sizes[order], self.arrivals[order],
+                        self.departures[order], self.name)
+
+    def subset(self, mask: np.ndarray, name: Optional[str] = None) -> "Instance":
+        return Instance(self.sizes[mask], self.arrivals[mask],
+                        self.departures[mask], name or self.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """The information revealed to an online algorithm when an item arrives.
+
+    ``pdep`` is the *predicted* departure time (clairvoyant setting: equal to
+    the real departure; learning-augmented: arrival + predicted duration;
+    non-clairvoyant: None and algorithms must not read it).
+    """
+
+    idx: int
+    size: np.ndarray      # (d,)
+    now: float            # == arrival time
+    pdep: Optional[float]  # predicted departure time, or None
+
+    @property
+    def pdur(self) -> Optional[float]:
+        return None if self.pdep is None else self.pdep - self.now
+
+
+@dataclasses.dataclass
+class PackingResult:
+    """Outcome of one engine run."""
+
+    usage_time: float            # accumulated bin usage time (the objective)
+    n_bins_opened: int
+    peak_open_bins: int
+    placements: np.ndarray       # (n,) absolute bin index per item
+    algorithm: str
+    instance: str
+    span: float                  # duration during which >=1 item is active
+
+    def ratio(self, lower_bound: float) -> float:
+        return self.usage_time / lower_bound if lower_bound > 0 else float("inf")

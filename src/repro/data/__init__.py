@@ -1,0 +1,3 @@
+"""Data substrate: DVBP traces, token pipeline, sequence packing."""
+from .traces import (DAY, HORIZON, load_azure_csv,  # noqa: F401
+                     make_azure_like_suite, make_huawei_like_suite)

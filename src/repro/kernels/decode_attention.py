@@ -1,0 +1,88 @@
+"""Single-token GQA decode attention Pallas TPU kernel.
+
+Decode attention is HBM-bandwidth-bound: the whole KV cache streams through
+VMEM once per step.  Grid (B, KV, nS) with the cache-length axis innermost;
+the G query heads that share one KV head form the row dim of the MXU tiles
+(rows = G, a natural fit for GQA).  Running softmax in fp32 VMEM scratch,
+kv_len masking for partially-filled caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, bs: int, ns: int, skv: int):
+    b, si = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bs, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = kpos < jnp.minimum(len_ref[b], skv)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    v = jnp.where(valid.reshape(bs, 1), v_ref[0, 0].astype(jnp.float32), 0.0)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(si == ns - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, scale=None, bs: int = 512,
+                     interpret: bool = False):
+    """q: (B,H,hd) one new token; k,v: (B,S,KV,hd); kv_len: (B,) int32.
+    Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    bs_ = min(bs, S)
+    ns = -(-S // bs_)
+    qg = q.reshape(B, KV, G, hd)
+    kt = k.transpose(0, 2, 1, 3)      # (B,KV,S,hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, scale=scale, bs=bs_, ns=ns, skv=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, ns),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # kv_len (B,)
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs_, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bs_, hd), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, qg, kt, vt)
+    return out.reshape(B, H, hd)

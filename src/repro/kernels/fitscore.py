@@ -1,0 +1,103 @@
+"""DVBP placement scoring Pallas TPU kernel - the paper's inner loop.
+
+At cloud scale an arrival must be scored against thousands of open bins
+x d resource dims: a bandwidth-bound stream over the bins matrix, ideal for
+VMEM tiling.  Tiles of 256 bins x d(pad 128) are scored per grid step:
+feasibility (all dims fit, with the engine's EPS tolerance) + an l1/l2/linf
+fit score, and a running argmin is kept in SMEM scratch so the kernel emits
+the chosen bin directly (the Best-Fit/First-Fit decision, fused).
+
+Scores are +inf for infeasible bins.  First Fit == argmin over open-order
+index among feasible, realized by score = bin order index.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EPS = 1e-9
+BIG = 3.0e38   # python float: baked into the kernel as an immediate
+
+NORMS = ("l1", "l2", "linf", "first_fit")
+
+
+def _kernel(rem_ref, alive_ref, item_ref, score_ref, best_ref, *,
+            norm: str, bn: int, nb: int, n: int, d: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        best_ref[0] = jnp.float32(BIG)
+        best_ref[1] = jnp.float32(-1.0)
+
+    rem = rem_ref[...].astype(jnp.float32)        # (bn, dpad)
+    item = item_ref[...].astype(jnp.float32)      # (1, dpad)
+    after = rem - item
+    dmask = jax.lax.broadcasted_iota(jnp.int32, after.shape, 1) < d
+    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    alive = (alive_ref[...] > 0) & (rows < n)
+    feasible = jnp.all((after >= -EPS) | ~dmask, axis=1, keepdims=True) & alive
+
+    masked = jnp.where(dmask, after, 0.0)
+    if norm == "l1":
+        score = jnp.sum(masked, axis=1, keepdims=True)
+    elif norm == "l2":
+        score = jnp.sqrt(jnp.sum(masked * masked, axis=1, keepdims=True))
+    elif norm == "linf":
+        score = jnp.max(jnp.where(dmask, after, -BIG), axis=1, keepdims=True)
+    else:   # first_fit: prefer earliest-opened feasible bin
+        score = rows.astype(jnp.float32)
+    score = jnp.where(feasible, score, BIG)
+    score_ref[...] = score
+
+    tile_best = jnp.min(score)
+    tile_arg = jnp.argmin(score[:, 0])
+
+    @pl.when(tile_best < best_ref[0])
+    def _upd():
+        best_ref[0] = tile_best
+        best_ref[1] = (i * bn + tile_arg).astype(jnp.float32)
+
+
+def fitscore(remaining, alive, item, *, norm: str = "linf", bn: int = 256,
+             interpret: bool = False):
+    """remaining: (N,d); alive: (N,) bool/int; item: (d,).
+    Returns (scores (N,), best_idx scalar int32, -1 if none feasible)."""
+    assert norm in NORMS
+    N, d = remaining.shape
+    dpad = max(128, -(-d // 128) * 128)
+    bn_ = min(bn, max(N, 8))
+    nb = -(-N // bn_)
+    rem_p = jnp.zeros((nb * bn_, dpad), remaining.dtype)
+    rem_p = rem_p.at[:N, :d].set(remaining)
+    alive_p = jnp.zeros((nb * bn_, 1), jnp.int32).at[:N, 0].set(
+        alive.astype(jnp.int32))
+    item_p = jnp.zeros((1, dpad), remaining.dtype).at[0, :d].set(item)
+
+    kernel = functools.partial(_kernel, norm=norm, bn=bn_, nb=nb, n=N, d=d)
+    scores, best = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bn_, dpad), lambda i: (i, 0)),
+            pl.BlockSpec((bn_, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, dpad), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn_, 1), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * bn_, 1), jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        ],
+        scratch_shapes=[],
+        interpret=interpret,
+    )(rem_p, alive_p, item_p)
+    scores = jnp.where(scores[:N, 0] >= BIG, jnp.inf, scores[:N, 0])
+    best_idx = jnp.where(best[0] >= BIG, -1, best[1]).astype(jnp.int32)
+    return scores, best_idx

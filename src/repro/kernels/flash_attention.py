@@ -1,0 +1,110 @@
+"""Blockwise (flash) attention Pallas TPU kernel.
+
+Grid (B, H, nQ, nK) with the KV axis innermost ("arbitrary" semantics so the
+running-softmax scratch carries across KV steps).  Q/K/V tiles live in VMEM
+via BlockSpecs; accumulation in fp32 scratch; one output tile written on the
+last KV step.  Supports causal + sliding-window masks and GQA (the K/V block
+index maps q-head -> kv-head).
+
+VMEM working set per step (bq=bk=128, hd<=256, fp32 acc):
+  q(128x256x2) + k,v(2x128x256x2) + acc(128x256x4) + p(128x128x4) ~ 0.5 MiB,
+comfortably under the ~16 MiB VMEM budget; MXU dims are 128-multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            nk: int, sq: int, skv: int):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (qpos < sq) & (kpos < skv)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0, 0].astype(jnp.float32)           # (bk, hd)
+    # zero OOB-padded V rows: p is 0 there but 0 * garbage may be NaN
+    kvalid = (ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)) < skv
+    v = jnp.where(kvalid, v, 0.0)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale=None, bq: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    bq_ = min(bq, max(Sq, 8))
+    bk_ = min(bk, max(Skv, 8))
+    nq = -(-Sq // bq_)
+    nk = -(-Skv // bk_)
+    # head-major layout for clean (bq, hd) tiles
+    qt = q.transpose(0, 2, 1, 3)     # (B,H,Sq,hd)
+    kt = k.transpose(0, 2, 1, 3)     # (B,KV,Skv,hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq_, bk=bk_, nk=nk,
+                               sq=Sq, skv=Skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk_, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk_, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((bq_, hd)),   # fp32 output accumulator
+            _vmem((bq_, 1)),    # running max
+            _vmem((bq_, 1)),    # running denominator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,75 @@
+"""Jit'd public wrappers with backend dispatch for every Pallas kernel.
+
+On TPU backends the Pallas kernels run natively; elsewhere the pure-jnp
+references (ref.py) run so the whole framework works identically on CPU
+(dry-run, tests).  ``impl="pallas_interpret"`` forces the kernel body in
+interpret mode (the correctness harness used by tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode_pallas
+from .fitscore import fitscore as _fitscore_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .rwkv6_scan import rwkv6_chunked as _rwkv6_pallas
+
+
+def _use_pallas(impl: str) -> bool:
+    if impl == "pallas":
+        return True
+    if impl == "auto":
+        return jax.default_backend() == "tpu"
+    return False
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def flash_attention(q, k, v, *, causal=True, window=0, impl="auto"):
+    if _use_pallas(impl):
+        return _flash_pallas(q, k, v, causal=causal, window=window)
+    if impl == "pallas_interpret":
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             interpret=True)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def decode_attention(q, k, v, kv_len, *, impl="auto"):
+    if _use_pallas(impl):
+        return _decode_pallas(q, k, v, kv_len)
+    if impl == "pallas_interpret":
+        return _decode_pallas(q, k, v, kv_len, interpret=True)
+    return ref.decode_attention_ref(q, k, v, kv_len)
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl"))
+def rwkv6(r, k, v, logw, u, *, chunk=16, impl="auto"):
+    if _use_pallas(impl):
+        return _rwkv6_pallas(r, k, v, logw, u, chunk=chunk)
+    if impl == "pallas_interpret":
+        return _rwkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=True)
+    return ref.rwkv6_ref(r, k, v, jnp.clip(logw, -4.0, 0.0), u)
+
+
+@partial(jax.jit, static_argnames=("norm", "impl"))
+def fitscore(remaining, alive, item, *, norm="linf", impl="auto"):
+    if _use_pallas(impl):
+        return _fitscore_pallas(remaining, alive, item, norm=norm)
+    if impl == "pallas_interpret":
+        return _fitscore_pallas(remaining, alive, item, norm=norm,
+                                interpret=True)
+    if norm == "first_fit":
+        n = remaining.shape[0]
+        feasible = jnp.all(remaining - item[None, :] >= -1e-9, axis=1) & \
+            (alive > 0)
+        scores = jnp.where(feasible, jnp.arange(n, dtype=jnp.float32),
+                           jnp.inf)
+    else:
+        scores, feasible = ref.fitscore_ref(remaining, alive > 0, item,
+                                            norm=norm)
+    best = jnp.where(jnp.isinf(scores).all(), -1, jnp.argmin(scores))
+    return scores, best.astype(jnp.int32)

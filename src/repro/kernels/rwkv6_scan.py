@@ -1,0 +1,109 @@
+"""RWKV6 chunked linear-attention Pallas TPU kernel.
+
+Grid (B*H, N chunks) with the chunk axis innermost and "arbitrary" semantics:
+the (K,V) recurrent state lives in fp32 VMEM scratch and carries across chunk
+steps.  Per chunk: two MXU matmuls for the pairwise intra-chunk term (with
+the factorized decay trick from models/linear_scan.py), one matmul against
+the carried state, one state update.  Per-step log-decay is clamped at
+LOG_DECAY_MIN so the factorized exponentials stay in fp32 range for L<=16.
+
+VMEM per step (L=16, K=V=64): r,k,v,lw tiles 4x16x64x4B + state 64x64x4
++ pair matrix 16x16x4 ~ 33 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LOG_DECAY_MIN = -4.0
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, state_out_ref,
+            state_ref, *, L: int, nk: int):
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)       # (L, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)       # (L, V)
+    lw = jnp.clip(lw_ref[0, 0].astype(jnp.float32), LOG_DECAY_MIN, 0.0)
+    u = u_ref[0].astype(jnp.float32)          # (1, K)
+
+    cum = jnp.cumsum(lw, axis=0)              # inclusive (L, K)
+    cum_exc = cum - lw                        # exclusive
+    tot = cum[-1:, :]                         # (1, K)
+
+    r_dec = r * jnp.exp(cum_exc)              # query side (pre-update)
+    k_idec = k * jnp.exp(-cum)
+    # pairwise A[i,j] = sum_k r_i e^{cum_exc_i} * k_j e^{-cum_j},  j < i
+    A = jax.lax.dot_general(r_dec, k_idec, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    A = jnp.where(j_idx < i_idx, A, 0.0)
+    y = jax.lax.dot(A, v, preferred_element_type=jnp.float32)
+    # cross-chunk: r_dec @ state ; bonus diagonal with u
+    y += jax.lax.dot(r_dec, state_ref[...],
+                     preferred_element_type=jnp.float32)
+    y += jnp.sum(r * u * k, axis=1, keepdims=True) * v
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: S = diag(e^{tot}) S + sum_j (k_j e^{tot-cum_j}) v_j^T
+    k_dec = k * jnp.exp(tot - cum)
+    state_ref[...] = jnp.exp(tot).T * state_ref[...] + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(n == nk - 1)
+    def _emit():
+        state_out_ref[0] = state_ref[...]
+
+
+def rwkv6_chunked(r, k, v, logw, u, *, chunk: int = 16,
+                  interpret: bool = False):
+    """r,k,logw: (B,S,H,K); v: (B,S,H,V); u: (H,K).
+    Returns (y (B,S,H,V) fp32, final_state (B,H,K,V) fp32)."""
+    B, S, H, K = k.shape
+    V = v.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    N = S // L
+    # (B*H, N, L, feat) layout
+    def lay(x, F):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, N, L, F)
+    rt, kt, lt = lay(r, K), lay(k, K), lay(logw, K)
+    vt = lay(v, V)
+    ut = jnp.broadcast_to(u[None, :, None, :], (B, H, 1, K)).reshape(
+        B * H, 1, K)
+
+    kernel = functools.partial(_kernel, L=L, nk=N)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B * H, N),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, K), lambda b, n: (b, n, 0, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda b, n: (b, n, 0, 0)),
+            pl.BlockSpec((1, 1, L, V), lambda b, n: (b, n, 0, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda b, n: (b, n, 0, 0)),
+            pl.BlockSpec((1, 1, K), lambda b, n: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, V), lambda b, n: (b, n, 0, 0)),
+            pl.BlockSpec((1, K, V), lambda b, n: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, N, L, V), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, lt, ut)
+    y = y.reshape(B, H, S, V).transpose(0, 2, 1, 3)
+    return y, state.reshape(B, H, K, V)

@@ -1,0 +1,135 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+production shardings on 512 placeholder host devices, record
+memory_analysis / cost_analysis / collective schedule, and emit the roofline
+terms (EXPERIMENTS.md §Dry-run, §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+The XLA_FLAGS line above MUST stay the first statement in this module (jax
+locks the device count at first init).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, get_config
+from ..models.config import SHAPES, shapes_for
+from . import roofline as R
+from .mesh import make_production_mesh
+from .specs import build_cell
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "experiments/dryrun", verbose: bool = True,
+             **cell_kw) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(cfg, shape_name, mesh, multi_pod, **cell_kw)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    with cell.mesh:
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    roof = R.analyze(compiled, n_devices=n_dev,
+                     model_flops=R.model_flops_for(cfg, shape), hlo_text=hlo)
+    from . import hlo_cost
+    transient = hlo_cost.max_transient(hlo)
+    # persistent per-device state (sharded args; outputs alias via donation)
+    persistent = ma.argument_size_in_bytes + max(
+        ma.output_size_in_bytes - ma.alias_size_in_bytes, 0)
+    # CPU buffer assignment neither aliases while carries in place nor keeps
+    # bf16 buffers bf16 (float normalization promotes them to f32), so
+    # cpu_peak is a loose upper bound.  The TPU estimate: exact persistent
+    # sharded state (+15% runtime slack) plus the largest transient working
+    # set capped at 2GiB (TPU collective-combiner / fusion granularity keeps
+    # single working sets far below the CPU pipeline's unbounded fusions;
+    # budgets hand-validated for the 340B cells in EXPERIMENTS.md §Dry-run).
+    est_peak = 1.15 * persistent + min(transient, 2 * 2 ** 30)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "cpu_peak_bytes": roof.peak_bytes,
+            "max_transient_bytes": transient,
+            "est_peak_bytes": est_peak,
+            "fits_16GB": est_peak <= R.CHIP_HBM,
+        },
+        "roofline": roof.table_row(),
+        "collectives": roof.coll_detail,
+        "model_flops": roof.model_flops,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{rec['mesh']}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        m = rec["memory"]
+        r = rec["roofline"]
+        print(f"[OK] {arch} x {shape_name} x {rec['mesh']}  "
+              f"compile={t_compile:.0f}s  "
+              f"est_peak={m['est_peak_bytes']/2**30:.2f}GiB "
+              f"(cpuBA={(m['cpu_peak_bytes'] or 0)/2**30:.1f}) "
+              f"fits={m['fits_16GB']}  dominant={r['dominant']}  "
+              f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+              f"coll={r['collective_s']*1e3:.2f}ms useful={r['useful_ratio']:.2f}",
+              flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in shapes_for(arch):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, multi_pod=mp, out_dir=args.out)
+            except Exception as e:
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"[FAIL] {arch} x {shape} x "
+                      f"{'2x16x16' if mp else '16x16'}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} cell(s) failed")
+        sys.exit(1)
+    print("\nall cells passed")
+
+
+if __name__ == "__main__":
+    main()

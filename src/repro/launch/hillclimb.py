@@ -1,0 +1,104 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Perf hillclimbing driver (§Perf): lower+compile a cell under named
+variants and report the roofline-term deltas.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell qwen_train
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models.config import SHAPES
+from . import roofline as R
+from .mesh import make_production_mesh
+from .specs import build_cell, make_rules
+
+
+def measure(arch, shape_name, *, cfg_patch=None, rules_patch=None,
+            build_kw=None, label="baseline"):
+    cfg = get_config(arch)
+    if cfg_patch:
+        cfg = dataclasses.replace(cfg, **cfg_patch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    rules = make_rules(cfg, shape, False)
+    if rules_patch:
+        rules = dataclasses.replace(rules, **rules_patch)
+    cell = build_cell(cfg, shape_name, mesh, False, rules=rules,
+                      **(build_kw or {}))
+    with mesh:
+        compiled = cell.lower().compile()
+    hlo = compiled.as_text()
+    roof = R.analyze(compiled, n_devices=mesh.devices.size,
+                     model_flops=R.model_flops_for(cfg, shape), hlo_text=hlo)
+    row = roof.table_row()
+    row["label"] = label
+    print(f"{label:28s} compute={row['compute_s']*1e3:9.2f}ms "
+          f"mem={row['memory_s']*1e3:9.2f}ms "
+          f"coll={row['collective_s']*1e3:9.2f}ms dom={row['dominant']:10s} "
+          f"useful={row['useful_ratio']:.3f}", flush=True)
+    return row
+
+
+# Final variant sets matching the EXPERIMENTS.md §Perf iteration logs.
+# NOTE: the it1 kv-head-replication fix for qwen graduated into the baseline
+# code (models/params.py), so "baseline" here already includes it; the
+# pre-fix numbers are recorded in EXPERIMENTS.md.
+CELLS = {
+    # -------- worst-roofline-fraction cell: qwen2.5-14b train_4k
+    "qwen_train": [
+        ("baseline(kv_repl)", {}),
+        ("mb8", {"build_kw": {"microbatches": 8}}),
+        ("mb8+SP[refuted]", {"build_kw": {"microbatches": 8},
+                             "rules_patch": {"seq_parallel": True}}),
+        ("mb8+flash_xla[refuted]", {"cfg_patch": {"attn_kv_chunk": 512},
+                                    "build_kw": {"microbatches": 8}}),
+    ],
+    # -------- most collective-bound cell: nemotron-4-340b train_4k
+    "nemotron_train": [
+        ("baseline(mb16,SP,int8)", {}),
+        ("mb8[refuted]", {"build_kw": {"microbatches": 8}}),
+        ("mb4", {"build_kw": {"microbatches": 4}}),
+        ("flash_xla[refuted]", {"cfg_patch": {"attn_kv_chunk": 512},
+                                "build_kw": {"microbatches": 8}}),
+    ],
+    # -------- paper-representative serving cell: deepseek decode_32k
+    "deepseek_decode": [
+        ("baseline(naive MLA,fsdp)", {}),
+        ("mla_absorb", {"build_kw": {"mla_absorb": True}}),
+        ("tp_only_weights", {"rules_patch": {"fsdp": False}}),
+        ("absorb+tp_only", {"rules_patch": {"fsdp": False},
+                            "build_kw": {"mla_absorb": True}}),
+    ],
+}
+
+CELL_TARGETS = {"qwen_train": ("qwen2.5-14b", "train_4k"),
+                "nemotron_train": ("nemotron-4-340b", "train_4k"),
+                "deepseek_decode": ("deepseek-v2-lite-16b", "decode_32k")}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=sorted(CELLS), required=True)
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args(argv)
+    arch, shape = CELL_TARGETS[args.cell]
+    print(f"== hillclimb {args.cell}: {arch} x {shape}")
+    rows = []
+    for label, kw in CELLS[args.cell]:
+        try:
+            rows.append(measure(arch, shape, label=label, **kw))
+        except Exception as e:
+            print(f"{label:28s} FAILED: {e}", flush=True)
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, f"{args.cell}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,423 @@
+"""Trip-count-aware cost model over compiled (post-optimization) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers / microbatch-accumulation model is undercounted by the trip
+count (verified: a 10x scanned matmul reports 1 matmul of FLOPs).  This
+module re-derives FLOPs / HBM bytes / collective wire bytes by walking the
+per-device HLO module, multiplying each computation's cost by the product of
+enclosing loop trip counts.
+
+Cost conventions (per device):
+  * dot: 2 * numel(result) * contracted_size          (exact)
+  * elementwise/reduce at fusion granularity: numel    (minor next to dots)
+  * bytes: at top-level-op granularity only (fusion interiors do not touch
+    HBM): sum(operand bytes) + result bytes, with slicing ops special-cased
+    (dynamic-slice/gather read only the slice, dynamic-update-slice/scatter
+    write only the update).
+  * collectives: ring-algorithm wire bytes (see roofline.py docstring).
+  * while trip count: the largest integer constant in the condition
+    computation (lax.scan lowers to compare(iv, constant(N))).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+
+
+def _parse_def(line: str):
+    """Parse '%name = TYPE kind(args...), attrs' robustly (tuple types may
+    contain /*index=N*/ comments).  Returns (name, type, kind, rest)."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    s = line[m.end():]
+    if s.startswith("("):   # balanced-paren tuple type
+        depth, i = 0, 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, s = s[: i + 1], s[i + 1:].lstrip()
+    else:
+        sp = s.find(" ")
+        if sp < 0:
+            return None
+        type_str, s = s[:sp], s[sp + 1:].lstrip()
+    km = re.match(r"([\w\-]+)\(", s)
+    if not km:
+        return None
+    return name, type_str, km.group(1), s[km.end():]
+_CALLED_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                        r"\{?(%?[\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_numel(type_str: str) -> int:
+    total = 0
+    for _, dims in _dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str          # args + attrs tail of the line
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    shapes: Dict[str, str]   # op name -> result type string
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.wire.items():
+            self.wire[k] = self.wire.get(k, 0.0) + v
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.wire.items()},
+                    {k: v * f for k, v in self.coll_counts.items()})
+
+    @property
+    def wire_total(self) -> float:
+        return sum(self.wire.values())
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped.endswith("{") and "->" in stripped and \
+                (stripped.startswith("%") or stripped.startswith("ENTRY")):
+            # computation header: "%name (params) -> type {" / "ENTRY %name ..."
+            m = re.search(r"(%[\w.\-]+)\s*\(", line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    comps["ENTRY"] = cur
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_def(line)
+        if parsed:
+            name, type_str, kind, rest = parsed
+            cur.ops.append(Op(name, type_str, kind, rest))
+            cur.shapes[name] = type_str
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """lax.scan lowers to compare(iv, constant(N)): N is the largest integer
+    constant defined in the condition computation."""
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.match(r"(\d+)\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        for c in re.findall(r"constant\((\d+)\)", op.rest):
+            best = max(best, int(c))
+    return best
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_numel = _type_numel(op.type_str)
+    m = _CONTRACT_RE.search(op.rest)
+    contracted = 1
+    lhs = re.match(r"\s*(%[\w.\-]+)", op.rest)
+    if m and lhs and lhs.group(1) in shapes:
+        dims = _dims(shapes[lhs.group(1)])
+        if dims:
+            shape = dims[0][1]
+            for d in m.group(1).split(","):
+                if d:
+                    contracted *= shape[int(d)]
+    return 2.0 * out_numel * contracted
+
+
+def _operand_bytes(op: Op, shapes: Dict[str, str]) -> float:
+    total = 0.0
+    args = op.rest.split("),")[0]
+    for name in re.findall(r"(%[\w.\-]+)", args):
+        if name in shapes:
+            total += _type_bytes(shapes[name])
+    return total
+
+
+def _fusion_hbm_bytes(op: Op, comp: Computation,
+                      inner: Optional[Computation]) -> float:
+    """HBM bytes touched by a fusion call, including its result.
+
+    Refinements over naive operands+result accounting (both essential for
+    scan-over-layers modules):
+      * operands consumed only via dynamic-slice / gather count at slice size
+        (stacked-weights pattern);
+      * a root dynamic-update-slice aliases its big buffer in place: the
+        buffer operand and the result both count at *update* size.
+    """
+    arg_str = op.rest.split("), ")[0]
+    operands = re.findall(r"(%[\w.\-]+)", arg_str)
+    result_bytes = _type_bytes(op.type_str)
+    if inner is None:
+        return sum(_type_bytes(comp.shapes.get(nm, ""))
+                   for nm in operands) + result_bytes
+    params: Dict[int, str] = {}
+    for iop in inner.ops:
+        if iop.kind == "parameter":
+            m = re.match(r"(\d+)\)", iop.rest)
+            if m:
+                params[int(m.group(1))] = iop.name
+    # interior DUS: big-buffer param -> update bytes; shrink result charge
+    # (numel comparison: CPU float normalization may change dtypes between
+    # the DUS and the fusion root convert)
+    result_numel = _type_numel(op.type_str)
+    dus_buf_params = {}
+    for iop in inner.ops:
+        if iop.kind == "dynamic-update-slice":
+            names = re.findall(r"(%[\w.\-]+)", iop.rest)
+            if len(names) >= 2:
+                upd_bytes = _type_bytes(inner.shapes.get(names[1], ""))
+                dus_buf_params[names[0]] = upd_bytes
+                if _type_numel(iop.type_str) == result_numel:
+                    result_bytes = min(result_bytes, upd_bytes)
+    total = float(result_bytes)
+    for idx, nm in enumerate(operands):
+        full = _type_bytes(comp.shapes.get(nm, ""))
+        pname = params.get(idx)
+        if pname is None:
+            total += full
+            continue
+        pat = re.compile(re.escape(pname) + r"(?![\w.\-])")
+        consumers = [iop for iop in inner.ops
+                     if iop.kind != "parameter" and pat.search(iop.rest)]
+        kinds = {c.kind for c in consumers}
+        # "convert" is tolerated in the slice-only consumer sets: XLA:CPU's
+        # float normalization inserts full-buffer bf16<->f32 converts that do
+        # not exist in the TPU pipeline we are modeling.
+        if consumers and kinds <= {"dynamic-slice", "gather", "convert"} \
+                and kinds & {"dynamic-slice", "gather"}:
+            total += sum(_type_bytes(c.type_str) for c in consumers
+                         if c.kind in ("dynamic-slice", "gather"))
+        elif pname in dus_buf_params and kinds <= {"dynamic-update-slice",
+                                                   "bitcast", "copy",
+                                                   "convert"}:
+            total += dus_buf_params[pname]
+        else:
+            total += full
+    return total
+
+
+def _collective_wire(op: Op) -> Tuple[str, float]:
+    size = _type_bytes(op.type_str)
+    line = op.rest
+    m = _GROUPS_RE.search(line)
+    if m:
+        n = len(m.group(1).split(","))
+    else:
+        m = _GROUPS_IOTA_RE.search(line)
+        n = int(m.group(2)) if m else 2
+    kind = next(k for k in COLLECTIVES if op.kind.startswith(k))
+    if kind == "all-gather":
+        wire = size * (n - 1) / n
+    elif kind == "reduce-scatter":
+        wire = size * (n - 1)
+    elif kind == "all-reduce":
+        wire = 2 * size * (n - 1) / n
+    elif kind == "all-to-all":
+        wire = size * (n - 1) / n
+    else:
+        wire = size
+    return kind, wire
+
+
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "partition-id", "replica-id", "custom-call"}
+_SLICE_READ = {"dynamic-slice", "gather"}
+_SLICE_WRITE = {"dynamic-update-slice", "scatter"}
+
+
+def _comp_cost(comp: Computation, comps: Dict[str, Computation],
+               memo: Dict[Tuple[str, bool], Cost], top_level: bool) -> Cost:
+    key = (comp.name, top_level)
+    if key in memo:
+        return memo[key]
+    memo[key] = Cost()   # break recursion defensively
+    total = Cost()
+    for op in comp.ops:
+        kind = op.kind
+        called = {}
+        for m in _CALLED_RE.finditer(op.rest):
+            for nm in m.group(1).split(","):
+                nm = nm.strip()
+                called[nm if nm.startswith("%") else "%" + nm] = True
+        if kind == "while":
+            body = cond = None
+            bm = re.search(r"body=(%?[\w.\-]+)", op.rest)
+            cm = re.search(r"condition=(%?[\w.\-]+)", op.rest)
+            if bm:
+                body = bm.group(1) if bm.group(1).startswith("%") \
+                    else "%" + bm.group(1)
+            if cm:
+                cond = cm.group(1) if cm.group(1).startswith("%") \
+                    else "%" + cm.group(1)
+            trip = _trip_count(comps[cond]) if cond in comps else 1
+            if body in comps:
+                total += _comp_cost(comps[body], comps, memo,
+                                    top_level).scaled(trip)
+            continue
+        if kind == "fusion":
+            inner = Cost()
+            inner_comp = None
+            for nm in called:
+                if nm in comps:
+                    inner_comp = comps[nm]
+                    inner += _comp_cost(inner_comp, comps, memo, False)
+            total += Cost(inner.flops, 0.0, inner.wire, inner.coll_counts)
+            if top_level:
+                total += Cost(0.0, _fusion_hbm_bytes(op, comp, inner_comp))
+            continue
+        if any(kind.startswith(c) for c in COLLECTIVES):
+            if kind.endswith("-done"):
+                continue
+            ckind, wire = _collective_wire(op)
+            total += Cost(0.0,
+                          (_type_bytes(op.type_str) * 2 if top_level else 0.0),
+                          {ckind: wire}, {ckind: 1.0})
+            continue
+        if kind in ("call", "conditional"):
+            for nm in called:
+                if nm in comps:
+                    total += _comp_cost(comps[nm], comps, memo, top_level)
+        if kind in _FREE:
+            continue
+        # flops
+        if kind in ("dot", "convolution"):
+            total += Cost(_dot_flops(op, comp.shapes), 0.0)
+        else:
+            total += Cost(float(_type_numel(op.type_str)), 0.0)
+        # bytes (top-level granularity only)
+        if top_level:
+            total += Cost(0.0, _plain_op_bytes(op, comp))
+    memo[key] = total
+    return total
+
+
+def _plain_op_bytes(op: Op, comp: Computation) -> float:
+    """HBM bytes for a standalone (non-fusion) op: slicing ops touch only
+    the slice/update, everything else operands + result."""
+    if op.kind in _SLICE_READ:
+        return 2.0 * _type_bytes(op.type_str)
+    if op.kind in _SLICE_WRITE:
+        upd = 0.0
+        names = re.findall(r"(%[\w.\-]+)", op.rest.split(")")[0])
+        if len(names) >= 2 and names[1] in comp.shapes:
+            upd = _type_bytes(comp.shapes[names[1]])
+        return 2.0 * upd + 64.0
+    return _operand_bytes(op, comp.shapes) + _type_bytes(op.type_str)
+
+
+def module_cost(hlo_text: str) -> Cost:
+    comps = parse_module(hlo_text)
+    if "ENTRY" not in comps:
+        raise ValueError("no ENTRY computation found in HLO text")
+    memo: Dict[Tuple[str, bool], Cost] = {}
+    return _comp_cost(comps["ENTRY"], comps, memo, True)
+
+
+_CARRYISH = {"parameter", "tuple", "get-tuple-element", "while", "constant",
+             "conditional", "call", "bitcast", "after-all"}
+
+
+def max_transient(hlo_text: str) -> float:
+    """Largest single-op working set (operands+result) outside loop carries.
+
+    Used for the analytic TPU peak-memory estimate: XLA's CPU buffer
+    assignment does not alias while-loop carries in place (TPU does), so the
+    CPU `temp_size` wildly overstates the real device peak for scanned
+    models.  Estimated TPU peak ~= persistent state + 2 * max_transient.
+    """
+    comps = parse_module(hlo_text)
+    best = 0.0
+    coll_cap = 2 * 256 * 1024 * 1024   # TPU collective-combiner bound (in+out)
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind in _CARRYISH:
+                continue
+            if op.kind == "fusion":
+                called = re.search(r"calls=(%?[\w.\-]+)", op.rest)
+                inner = comps.get("%" + called.group(1).lstrip("%")) \
+                    if called else None
+                ws = _fusion_hbm_bytes(op, comp, inner)
+            else:
+                ws = _plain_op_bytes(op, comp)
+            if any(op.kind.startswith(c) for c in COLLECTIVES):
+                # XLA:CPU's combiner bundles collectives without a size cap;
+                # the TPU pipeline bounds bundles (~tens-hundreds of MB), so
+                # a 6.7GB fused all-reduce is a CPU-compile artifact.
+                ws = min(ws, coll_cap)
+            best = max(best, ws)
+    return best

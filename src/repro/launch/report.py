@@ -1,0 +1,60 @@
+"""Render the EXPERIMENTS.md roofline/dry-run tables from
+experiments/dryrun/*.json artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report > experiments/roofline.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def rows(mesh: str):
+    out = []
+    for path in sorted(glob.glob(f"experiments/dryrun/*_{mesh}.json")):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def main():
+    print("### Single-pod (16x16 = 256 chips) roofline - all baseline cells\n")
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+          "dominant | useful (6ND/HLO) | est peak (GiB) | fits 16GB |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---|")
+    for rec in rows("16x16"):
+        r = rec["roofline"]
+        m = rec["memory"]
+        print(f"| {rec['arch']} | {rec['shape']} "
+              f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+              f"| {r['collective_s']*1e3:.2f} | {r['dominant']} "
+              f"| {r['useful_ratio']:.2f} | {fmt_bytes(m['est_peak_bytes'])} "
+              f"| {'yes' if m['fits_16GB'] else 'NO'} |")
+    print("\n### Multi-pod (2x16x16 = 512 chips) - compile + memory proof\n")
+    print("| arch | shape | compile (s) | est peak (GiB) | fits | dominant |")
+    print("|---|---|---:|---:|---|---|")
+    for rec in rows("2x16x16"):
+        r = rec["roofline"]
+        m = rec["memory"]
+        print(f"| {rec['arch']} | {rec['shape']} | {rec['compile_s']:.0f} "
+              f"| {fmt_bytes(m['est_peak_bytes'])} "
+              f"| {'yes' if m['fits_16GB'] else 'NO'} | {r['dominant']} |")
+    print("\n### Collective mix (single-pod, wire GB/device)\n")
+    print("| arch | shape | all-gather | all-reduce | reduce-scatter | "
+          "all-to-all | permute |")
+    print("|---|---|---:|---:|---:|---:|---:|")
+    for rec in rows("16x16"):
+        c = rec["collectives"]
+        g = lambda k: f"{c.get(k, 0.0)/1e9:.1f}"
+        print(f"| {rec['arch']} | {rec['shape']} | {g('all-gather')} "
+              f"| {g('all-reduce')} | {g('reduce-scatter')} "
+              f"| {g('all-to-all')} | {g('collective-permute')} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+Hardware model (TPU v5e class, per chip):
+    peak bf16 compute 197 TFLOP/s | HBM bandwidth 819 GB/s | ICI ~50 GB/s/link
+
+`cost_analysis()` FLOPs / bytes are for the *per-device* SPMD module, so
+    compute_term = flops / PEAK ;  memory_term = bytes / HBM_BW.
+Collective bytes are not in cost_analysis: we parse the compiled HLO text and
+sum wire bytes per device for every collective, with ring-algorithm factors:
+    all-gather      out_bytes * (n-1)/n
+    reduce-scatter  out_bytes * (n-1)
+    all-reduce      2 * bytes * (n-1)/n
+    all-to-all      bytes * (n-1)/n
+    collective-permute  bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+CHIP_HBM = 16 * 1024 ** 3  # v5e HBM capacity
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:   # iota form [num_groups,group_size]
+        return int(m.group(2))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Wire bytes per device, by collective kind, from HLO text."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts: Dict[str, int] = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:     # async pair: count only the -start
+            continue
+        size = _shape_bytes(type_str)
+        n = _group_size(line)
+        if kind == "all-gather":
+            wire = size * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = size * (n - 1)
+        elif kind == "all-reduce":
+            wire = 2 * size * (n - 1) / n
+        elif kind == "all-to-all":
+            wire = size * (n - 1) / n
+        else:
+            wire = size
+        out[kind] += wire
+        counts[kind] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per device
+    bytes_hbm: float           # per device
+    bytes_wire: float          # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float         # 6ND / 2ND (whole step, all devices)
+    useful_ratio: float        # model_flops / (flops * n_devices)
+    coll_detail: Dict[str, float]
+    peak_bytes: Optional[int] = None
+
+    def table_row(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "flops_per_dev": self.flops, "hbm_bytes_per_dev": self.bytes_hbm,
+            "wire_bytes_per_dev": self.bytes_wire,
+            "peak_bytes": self.peak_bytes,
+        }
+
+
+def _cost_value(cost, key: str) -> float:
+    if cost is None:
+        return 0.0
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return float(cost.get(key, 0.0))
+
+
+def analyze(compiled, *, n_devices: int, model_flops: float,
+            hlo_text: Optional[str] = None) -> Roofline:
+    """Roofline terms via the trip-count-aware HLO walker (hlo_cost.py).
+    NOTE: compiled.cost_analysis() counts while-loop bodies once and is only
+    kept as a cross-check; module_cost multiplies by trip counts."""
+    from . import hlo_cost
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    mc = hlo_cost.module_cost(text)
+    flops = mc.flops
+    nbytes = mc.bytes
+    coll = dict(mc.wire)
+    coll["_counts"] = mc.coll_counts
+    wire = mc.wire_total
+    compute_s = flops / PEAK_FLOPS
+    memory_s = nbytes / HBM_BW
+    collective_s = wire / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    - ma.alias_size_in_bytes + ma.temp_size_in_bytes)
+    except Exception:
+        pass
+    useful = model_flops / (flops * n_devices) if flops else 0.0
+    return Roofline(flops, nbytes, wire, compute_s, memory_s, collective_s,
+                    dominant, model_flops, useful, coll, peak)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6ND (train) / 2ND (inference) with N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.frontend == "audio_stub":
+            tokens = shape.global_batch * (shape.seq_len + shape.seq_len // 4)
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch   # decode: one token per sequence

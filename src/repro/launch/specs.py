@@ -1,0 +1,249 @@
+"""Per-(arch x shape) abstract inputs + shardings + step builders.
+
+Everything here is ShapeDtypeStruct-based: no device allocation.  These specs
+drive the multi-pod dry-run (lower + compile), the roofline analysis, and
+they document exactly what tensor travels where for every cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import params as P_
+from ..models.config import SHAPES, ModelConfig, ShapeConfig
+from ..models.sharding import ShardingRules, tree_pspecs
+from ..models.transformer import Runtime, forward, init_cache
+from ..train.optimizer import OptConfig, init_opt_state, opt_state_pspecs
+from ..train.train_step import make_train_step
+
+# global-batch microbatch count for train_4k (per-device micro batch of 1-2)
+MICROBATCHES = {
+    "nemotron-4-340b": 16, "qwen2.5-14b": 16, "gemma3-12b": 16,
+    "minitron-8b": 16, "pixtral-12b": 16, "deepseek-v2-lite-16b": 8,
+    "granite-moe-3b-a800m": 8, "rwkv6-1.6b": 8, "hymba-1.5b": 8,
+    "whisper-medium": 4,
+}
+# sequence parallelism: required for nemotron's 18k residual to fit 16GB
+SEQ_PARALLEL = {"nemotron-4-340b"}
+# int8 optimizer states: required for 340B x AdamW on a 16GB chip
+INT8_OPT = {"nemotron-4-340b"}
+# bf16 gradient accumulator (Megatron-style): 340B fp32 grads don't fit
+BF16_ACCUM = {"nemotron-4-340b"}
+
+
+def make_rules(cfg: ModelConfig, shape: ShapeConfig, multi_pod: bool,
+               *, fsdp: Optional[bool] = None,
+               seq_parallel: Optional[bool] = None) -> ShardingRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if fsdp is None:
+        fsdp = True   # params 2D-sharded everywhere (340B must; others cheap)
+    if seq_parallel is None:
+        seq_parallel = shape.kind in ("train", "prefill") \
+            and cfg.name in SEQ_PARALLEL
+    return ShardingRules(fsdp=fsdp, expert_parallel=True,
+                         seq_parallel=seq_parallel, data_axes=dp,
+                         fsdp_vocab_tables=shape.is_train)
+
+
+def opt_config(cfg: ModelConfig) -> OptConfig:
+    return OptConfig(state_dtype="int8" if cfg.name in INT8_OPT else "float32")
+
+
+def _maybe(axis, size: int, mesh: Mesh):
+    """axis name if the dim divides the mesh axis size, else None."""
+    if axis is None:
+        return None
+    n = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        n *= mesh.shape[a]
+    return axis if size % n == 0 else None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Dict, Dict]:
+    """Training/prefill batch: abstract arrays + PartitionSpecs."""
+    B, S = shape.global_batch, shape.seq_len
+    bdt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_stub":
+        # seq_len counts encoder frames; decoder runs S/4 text tokens
+        Sd = S // 4
+        arrs = {"tokens": _sds((B, Sd), jnp.int32),
+                "labels": _sds((B, Sd), jnp.int32),
+                "enc_embeds": _sds((B, S, cfg.d_model), bdt)}
+        specs = {"tokens": P(("dp",), None), "labels": P(("dp",), None),
+                 "enc_embeds": P(("dp",), None, None)}
+    elif cfg.frontend == "vision_stub":
+        arrs = {"tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32),
+                "frontend_embeds": _sds((B, cfg.n_frontend_tokens,
+                                         cfg.d_model), bdt)}
+        specs = {"tokens": P(("dp",), None), "labels": P(("dp",), None),
+                 "frontend_embeds": P(("dp",), None, None)}
+    else:
+        arrs = {"tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32)}
+        specs = {"tokens": P(("dp",), None), "labels": P(("dp",), None)}
+    return arrs, specs
+
+
+def _resolve_dp(spec: P, dp: Tuple[str, ...]) -> P:
+    """Replace the "dp" placeholder with the actual data axes."""
+    out = []
+    for e in spec:
+        if e == "dp" or e == ("dp",):
+            out.append(dp)
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                dp: Tuple[str, ...], dtype) -> Tuple[Dict, Dict]:
+    """Abstract decode cache + PartitionSpecs.
+
+    KV sequence dim shards over "model" (plus "data" too when batch=1, the
+    long_500k case) so multi-hundred-GB caches spread across the pod; GSPMD
+    turns the softmax over the sharded length into a cheap all-reduce.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S, dtype=dtype))
+    b_ax = _maybe(dp, B, mesh)
+    seq_ax = ("data", "model") if b_ax is None else "model"
+    h_ax = _maybe("model", cfg.n_heads, mesh)
+
+    def spec_for(path, leaf):
+        name = path[-1].key
+        if name in ("k", "v", "k_q", "v_q", "k_s", "v_s"):  # (L,B,S,KV,*)
+            return P(None, b_ax, _maybe(seq_ax, S, mesh), None, None)
+        if name == "lat":               # (L,B,S,lora+r)
+            return P(None, b_ax, _maybe(seq_ax, S, mesh), None)
+        if name in ("state", "ssm"):    # (L,B,H,K,V)
+            return P(None, b_ax, h_ax, None, None)
+        if name in ("shift_a", "shift_f"):   # (L,B,d)
+            return P(None, b_ax, None)
+        if name == "enc_out":           # (B,Se,d)
+            return P(b_ax, None, None)
+        raise KeyError(name)
+
+    if cfg.arch_kind == "encdec":
+        enc_len = 1500 if not shape.is_train else shape.seq_len
+        cache = dict(cache)
+        cache["enc_out"] = _sds((B, enc_len, cfg.d_model), dtype)
+    specs = jax.tree_util.tree_map_with_path(spec_for, cache)
+    return cache, specs
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape x mesh) dry-run cell."""
+
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    multi_pod: bool
+    fn: object                  # the python callable to jit
+    abstract_args: tuple        # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: object
+    donate: tuple = ()
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate)
+        with self.mesh:
+            return jitted.lower(*self.abstract_args)
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+               multi_pod: bool, *, rules: Optional[ShardingRules] = None,
+               opt: Optional[OptConfig] = None,
+               microbatches: Optional[int] = None,
+               mla_absorb: bool = False) -> Cell:
+    shape = SHAPES[shape_name]
+    rules = rules or make_rules(cfg, shape, multi_pod)
+    dp = rules.data_axes
+    ns = lambda s: NamedSharding(mesh, s)
+    pspec_tree = tree_pspecs(cfg, mesh, rules)
+    rt = Runtime(mesh=mesh, rules=rules, mla_absorb=mla_absorb and
+                 shape.kind == "decode")
+
+    if shape.is_train:
+        opt = opt or opt_config(cfg)
+        mb = microbatches or MICROBATCHES.get(cfg.name, 8)
+        params = P_.abstract_params(cfg, dtype=jnp.float32)
+        opt_state = jax.eval_shape(lambda: init_opt_state(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params), opt))
+        ospecs = opt_state_pspecs(pspec_tree, opt)
+        batch, bspecs = batch_struct(cfg, shape)
+        bspecs = jax.tree.map(lambda s: _resolve_dp(s, dp), bspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        accum = jnp.bfloat16 if cfg.name in BF16_ACCUM else jnp.float32
+        step = make_train_step(cfg, rt, opt, microbatches=mb,
+                               accum_dtype=accum)
+        in_sh = (jax.tree.map(ns, pspec_tree,
+                              is_leaf=lambda x: isinstance(x, P)),
+                 jax.tree.map(ns, ospecs,
+                              is_leaf=lambda x: isinstance(x, P)),
+                 jax.tree.map(ns, bspecs,
+                              is_leaf=lambda x: isinstance(x, P)))
+        out_sh = (in_sh[0], in_sh[1], None)
+        return Cell(cfg, shape, mesh, multi_pod, step,
+                    (params, opt_state, batch), in_sh, out_sh, donate=(0, 1))
+
+    # ---- inference cells: params in bf16
+    bdt = jnp.dtype(cfg.dtype)
+    params = P_.abstract_params(cfg, dtype=bdt)
+    psh = jax.tree.map(ns, pspec_tree, is_leaf=lambda x: isinstance(x, P))
+    B, S = shape.global_batch, shape.seq_len
+    b_ax = _maybe(dp, B, mesh)
+
+    if shape.kind == "prefill":
+        batch, bspecs = batch_struct(cfg, shape)
+        bspecs = jax.tree.map(lambda s: _resolve_dp(s, dp), bspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        cache_sh_tree, cspecs = cache_specs(cfg, shape, mesh, dp, bdt)
+
+        def prefill(params, batch):
+            extras = {k: v for k, v in batch.items()
+                      if k in ("enc_embeds", "frontend_embeds")}
+            toks = batch["tokens"]
+            smax = S + cfg.n_frontend_tokens   # vision prefix extends seq
+            if cfg.frontend == "audio_stub":
+                smax = S // 4                  # decoder tokens
+            cache = init_cache(cfg, toks.shape[0], smax, dtype=bdt)
+            if cfg.arch_kind == "encdec":
+                cache["enc_out"] = None
+                cache = {k: v for k, v in cache.items() if v is not None}
+            logits, cache, _ = forward(params, cfg, rt, toks, mode="prefill",
+                                       cache=cache, cache_pos=0, **extras)
+            return logits[:, -1], cache
+        in_sh = (psh, jax.tree.map(ns, bspecs,
+                                   is_leaf=lambda x: isinstance(x, P)))
+        out_sh = (ns(P(b_ax, None)),
+                  jax.tree.map(ns, cspecs, is_leaf=lambda x: isinstance(x, P)))
+        return Cell(cfg, shape, mesh, multi_pod, prefill, (params, batch),
+                    in_sh, out_sh)
+
+    # ---- decode: one new token against a seq_len cache
+    cache, cspecs = cache_specs(cfg, shape, mesh, dp, bdt)
+    toks = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+
+    def decode(params, tokens, cache, cache_pos):
+        logits, cache, _ = forward(params, cfg, rt, tokens, mode="decode",
+                                   cache=cache, cache_pos=cache_pos)
+        return logits[:, 0], cache
+
+    csh = jax.tree.map(ns, cspecs, is_leaf=lambda x: isinstance(x, P))
+    in_sh = (psh, ns(P(b_ax, None)), csh, ns(P()))
+    out_sh = (ns(P(b_ax, None)), csh)
+    return Cell(cfg, shape, mesh, multi_pod, decode,
+                (params, toks, cache, pos), in_sh, out_sh, donate=(2,))

@@ -1,0 +1,331 @@
+"""Attention: query-chunked GQA (full / sliding-window / mixed), MLA, and
+KV-cache decode paths.
+
+The training/prefill path is query-chunked: scores are materialized only for
+one (q_chunk x S_kv) tile at a time via lax.scan, bounding activation memory
+at long context (the XLA fallback for the Pallas flash kernel, which is
+dispatched on TPU backends by kernels.ops).  Softmax statistics are exact
+(full row per chunk).  All softmax math runs in fp32.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,half)
+    cos = jnp.cos(angles)[..., None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+          window: jax.Array, kv_len: Optional[jax.Array]) -> jax.Array:
+    """(..., Sq, Skv) boolean mask.  window: 0 => unlimited (per-layer scalar,
+    traced so local/global layers share one scan body)."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    m = jnp.ones(d.shape, bool)
+    if causal:
+        m &= d >= 0
+    m &= (window <= 0) | (d < window)
+    if kv_len is not None:
+        m &= k_pos[..., None, :] < kv_len[..., None, None]
+    return m
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  q_positions: jax.Array, k_positions: jax.Array,
+                  causal: bool = True, window=0,
+                  kv_len: Optional[jax.Array] = None,
+                  softcap: float = 0.0, q_chunk: int = 1024,
+                  kv_chunk: int = 0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (B,Sq,H,hd); k: (B,Skv,KV,hd); v: (B,Skv,KV,hd_v); positions (B,S*).
+    Returns (B,Sq,H,hd_v).  H must be a multiple of KV (GQA groups).
+    kv_chunk > 0 selects the online-softmax flash_xla path."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    hd_v = v.shape[3]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    window = jnp.asarray(window, jnp.int32)
+
+    qg = q.reshape(B, Sq, KV, G, hd)
+
+    def chunk_attn(q_c, qpos_c):
+        # q_c: (B,qc,KV,G,hd) -> scores (B,KV,G,qc,Skv) in fp32
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q_c, k,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        m = _mask(qpos_c, k_positions, causal, window, kv_len)
+        s = jnp.where(m[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+        return o
+
+    if kv_chunk:
+        # "flash_xla": online-softmax scan over KV blocks - only (bq, bkv)
+        # score tiles ever materialize, cutting attention HBM traffic ~10x
+        # vs. chunked-q (EXPERIMENTS.md §Perf).  The checkpointed body makes
+        # the backward recompute tiles instead of saving them.
+        Skv_p = -(-k.shape[1] // kv_chunk) * kv_chunk
+        pad_kv = Skv_p - k.shape[1]
+        kp_ = jnp.pad(k_positions, ((0, 0), (0, pad_kv)), mode="edge") \
+            if pad_kv else k_positions
+        k_ = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0))) if pad_kv else k
+        v_ = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0))) if pad_kv else v
+        kv_valid = (jnp.arange(Skv_p) < k.shape[1])[None, :]
+
+        def q_block(q_c, qpos_c):
+            nk = Skv_p // kv_chunk
+            ks = k_.reshape(B, nk, kv_chunk, KV, hd)
+            vs = v_.reshape(B, nk, kv_chunk, KV, hd_v)
+            kps = kp_.reshape(kp_.shape[0], nk, kv_chunk)
+            kvs = kv_valid.reshape(1, nk, kv_chunk)
+
+            def body(carry, xs):
+                acc, m, l = carry
+                kb, vb, kpb, kvb = xs
+                s = jnp.einsum("bqkgh,bskh->bkgqs", q_c, kb,
+                               preferred_element_type=jnp.float32) * scale
+                if softcap > 0:
+                    s = jnp.tanh(s / softcap) * softcap
+                msk = _mask(qpos_c, kpb, causal, window, kv_len) & \
+                    kvb[:, None, :]
+                s = jnp.where(msk[:, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(-1))
+                alpha = jnp.exp(m - m_new)
+                p = jnp.exp(s - m_new[..., None])
+                l = l * alpha + p.sum(-1)
+                acc = acc * alpha[..., None] + jnp.einsum(
+                    "bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb)
+                return (acc, m_new, l), None
+
+            qc = q_c.shape[1]
+            init = (jnp.zeros((B, KV, G, qc, hd_v), jnp.float32),
+                    jnp.full((B, KV, G, qc), NEG_INF),
+                    jnp.zeros((B, KV, G, qc)))
+            xs = (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0),
+                  jnp.moveaxis(kps, 1, 0), jnp.moveaxis(kvs, 1, 0))
+            (acc, m, l), _ = jax.lax.scan(jax.checkpoint(body), init, xs)
+            o = acc / jnp.maximum(l, 1e-30)[..., None]
+            return jnp.moveaxis(o, 3, 1)   # (B,qc,KV,G,hd_v)
+
+        pad = (-Sq) % q_chunk
+        if pad:
+            qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+            q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)),
+                                  mode="edge")
+        n = (Sq + pad) // q_chunk
+        if n == 1:
+            out = q_block(qg, q_positions)[:, :Sq]
+        else:
+            qs = qg.reshape(B, n, q_chunk, KV, G, hd).transpose(
+                1, 0, 2, 3, 4, 5)
+            ps = q_positions.reshape(q_positions.shape[0], n,
+                                     q_chunk).transpose(1, 0, 2)
+            out = jax.lax.map(lambda a: q_block(*a), (qs, ps))
+            out = out.transpose(1, 0, 2, 3, 4, 5).reshape(
+                B, Sq + pad, KV, G, hd_v)[:, :Sq]
+        return out.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+    if Sq <= q_chunk:
+        out = chunk_attn(qg, q_positions)
+    else:
+        pad = (-Sq) % q_chunk   # pad queries up to a chunk multiple
+        if pad:
+            qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+            q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)),
+                                  mode="edge")
+        n = (Sq + pad) // q_chunk
+        qs = qg.reshape(B, n, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_positions.reshape(B, n, q_chunk).transpose(1, 0, 2)
+        out = jax.lax.map(lambda args: chunk_attn(*args), (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq + pad, KV, G, hd_v)
+        out = out[:, :Sq]
+    return out.reshape(B, Sq, H, hd_v)
+
+
+# --------------------------------------------------------------------- blocks
+
+def _proj(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def attention_block(blk, x, cfg, *, positions, window, cache=None,
+                    cache_pos=None, cross_states=None,
+                    prefix: str = "") -> Tuple:
+    """Standard GQA attention (or cross-attention onto ``cross_states``).
+
+    cache: None (train) or dict {"k","v"} with layout (B, Smax, KV, hd);
+    cache_pos: scalar int32 write offset (decode). Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    g = lambda name: blk[prefix + name]
+    H, KVh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _proj(x, g("wq"), g("bq") if cfg.qkv_bias and not prefix else None)
+    q = q.reshape(B, S, H, hd)
+    if cross_states is not None:
+        e = cross_states.astype(x.dtype)
+        Se = e.shape[1]
+        k = _proj(e, g("wk")).reshape(B, Se, KVh, hd)
+        v = _proj(e, g("wv")).reshape(B, Se, KVh, hd)
+        out = gqa_attention(q, k, v, q_positions=positions,
+                            k_positions=jnp.arange(Se)[None, :],
+                            causal=False, window=0, q_chunk=cfg.attn_q_chunk)
+        return _proj(out.reshape(B, S, H * hd), g("wo")), None
+
+    k = _proj(x, g("wk"), g("bk") if cfg.qkv_bias else None).reshape(B, S, KVh, hd)
+    v = _proj(x, g("wv"), g("bv") if cfg.qkv_bias else None).reshape(B, S, KVh, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = gqa_attention(q, k, v, q_positions=positions, k_positions=positions,
+                            causal=True, window=window,
+                            q_chunk=cfg.attn_q_chunk,
+                            kv_chunk=cfg.attn_kv_chunk)
+        new_cache = {"k": k, "v": v}
+    elif "k_q" in cache:
+        # int8 KV cache: halves cache HBM/stream bytes (per-position absmax
+        # scales; standard serving-quality quantization) - §Perf
+        Smax = cache["k_q"].shape[1]
+        kq, ks = quant_kv(k)
+        vq, vs = quant_kv(v)
+        ckq, cvq = _cache_update(cache["k_q"], cache["v_q"], kq, vq,
+                                 cache_pos)
+        cks, cvs = _cache_update(cache["k_s"], cache["v_s"], ks, vs,
+                                 cache_pos)
+        kv_len = (jnp.zeros((B,), jnp.int32) + cache_pos + S).astype(jnp.int32)
+        out = gqa_attention(q, dequant_kv(ckq, cks, x.dtype),
+                            dequant_kv(cvq, cvs, x.dtype),
+                            q_positions=positions,
+                            k_positions=jnp.arange(Smax)[None, :],
+                            causal=True, window=window, kv_len=kv_len,
+                            q_chunk=cfg.attn_q_chunk,
+                            kv_chunk=cfg.attn_kv_chunk)
+        new_cache = {"k_q": ckq, "v_q": cvq, "k_s": cks, "v_s": cvs}
+    else:
+        Smax = cache["k"].shape[1]
+        ck, cv = _cache_update(cache["k"], cache["v"], k, v, cache_pos)
+        kv_len = (jnp.zeros((B,), jnp.int32) + cache_pos + S).astype(jnp.int32)
+        out = gqa_attention(q, ck, cv, q_positions=positions,
+                            k_positions=jnp.arange(Smax)[None, :],
+                            causal=True, window=window, kv_len=kv_len,
+                            q_chunk=cfg.attn_q_chunk,
+                            kv_chunk=cfg.attn_kv_chunk)
+        new_cache = {"k": ck, "v": cv}
+    return _proj(out.reshape(B, S, H * hd), g("wo")), new_cache
+
+
+def _cache_update(ck, cv, k, v, cache_pos):
+    """Write new K/V at cache_pos (scalar, or (B,) for continuous batching
+    where each slot sits at a different depth)."""
+    if jnp.ndim(cache_pos) == 0:
+        return (jax.lax.dynamic_update_slice_in_dim(ck, k, cache_pos, axis=1),
+                jax.lax.dynamic_update_slice_in_dim(cv, v, cache_pos, axis=1))
+    upd = jax.vmap(lambda c, u, p:
+                   jax.lax.dynamic_update_slice_in_dim(c, u, p, axis=0))
+    return upd(ck, k, cache_pos), upd(cv, v, cache_pos)
+
+
+# ---------------------------------------------------- int8 KV cache (§Perf)
+
+def quant_kv(x: jax.Array):
+    """Per-(position, head) absmax int8 quantization over the last dim."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127,
+                 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequant_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _rms(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    n = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (n * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_attention_block(blk, x, cfg, *, positions, cache=None, cache_pos=None,
+                        absorb: bool = False) -> Tuple:
+    """DeepSeek-V2 Multi-head Latent Attention.
+
+    Caches only the compressed latent (c_kv || k_rope): (B, Smax, lora+r).
+    ``absorb=True`` (decode optimization, §Perf): queries are absorbed through
+    W_UK so attention runs in the latent space and W_UV is applied to the
+    attended latent - no per-position K/V up-projection over the whole cache.
+    """
+    B, S, _ = x.shape
+    H, hd, r, lora = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+    q = _proj(x, blk["wq"]).reshape(B, S, H, hd + r)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    c = _proj(x, blk["w_dkv"])                       # (B,S,lora+r)
+    c_kv = _rms(c[..., :lora], blk["kv_norm"], cfg.norm_eps)
+    k_rope = rope(c[..., lora:][:, :, None, :], positions, cfg.rope_theta)
+    lat = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+
+    if cache is not None:
+        if jnp.ndim(cache_pos) == 0:
+            lat = jax.lax.dynamic_update_slice_in_dim(cache["lat"], lat,
+                                                      cache_pos, axis=1)
+        else:
+            lat = jax.vmap(lambda c, u, p:
+                           jax.lax.dynamic_update_slice_in_dim(c, u, p, 0))(
+                cache["lat"], lat, cache_pos)
+        kv_len = (jnp.zeros((B,), jnp.int32) + cache_pos + S).astype(jnp.int32)
+        k_positions = jnp.arange(lat.shape[1])[None, :]
+    else:
+        kv_len = None
+        k_positions = positions
+    new_cache = {"lat": lat}
+    c_all, krope_all = lat[..., :lora], lat[..., lora:]
+
+    scale = (hd + r) ** -0.5
+    wuk = blk["w_uk"].reshape(lora, H, hd).astype(x.dtype)
+    wuv = blk["w_uv"].reshape(lora, H, hd).astype(x.dtype)
+    if absorb:
+        # Absorbed decode: attention entirely in the (lora+r) latent space,
+        # a single shared "KV head"; W_UV applied to the attended latent.
+        q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, wuk)
+        q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)   # (B,S,H,lora+r)
+        ctx = gqa_attention(q_cat, lat[:, :, None, :], c_all[:, :, None, :],
+                            q_positions=positions, k_positions=k_positions,
+                            causal=True, window=0, kv_len=kv_len,
+                            q_chunk=cfg.attn_q_chunk, scale=scale)
+        out = jnp.einsum("bqhl,lhd->bqhd", ctx, wuv)
+    else:
+        # Naive path: up-project K,V for every cached position, then standard
+        # MHA with concatenated (nope || rope) key/query of dim hd+r.
+        k_nope = jnp.einsum("bsl,lhd->bshd", c_all, wuk)
+        v = jnp.einsum("bsl,lhd->bshd", c_all, wuv)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_all[:, :, None, :],
+                                      k_nope.shape[:3] + (r,))], axis=-1)
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = gqa_attention(q_cat, k_cat, v, q_positions=positions,
+                            k_positions=k_positions, causal=True, window=0,
+                            kv_len=kv_len, q_chunk=cfg.attn_q_chunk,
+                            scale=scale)
+    return _proj(out.reshape(B, S, H * hd), blk["wo"]), new_cache

@@ -1,0 +1,115 @@
+"""Chunked linear-attention recurrences: RWKV6 (per-channel data-dependent
+decay + bonus) and SSD-style selective SSM (scalar per-head decay; hymba).
+
+State:  S_t = diag(w_t) S_{t-1} + k_t v_t^T           (S: (K, V) per head)
+RWKV6:  y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)       (pre-update + bonus)
+SSD:    y_t = C_t S_t                                  (post-update)
+
+TPU adaptation: the sequence is processed in chunks of length L (config
+``scan_chunk``).  Cross-chunk flows through a length-S/L ``lax.scan`` of
+(K,V) matmul updates; intra-chunk pair terms are MXU matmuls using the
+factorized decay  exp(LW_i - LW_j) = exp(LW_i) * exp(-LW_j), which is
+numerically safe because per-step log-decay is clamped to >= LOG_DECAY_MIN
+and L * |LOG_DECAY_MIN| stays far below fp32 overflow (exp(+-88)).
+Sequential depth is L + S/L instead of S (e.g. 272 for 4k at L=16).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_MIN = -4.0   # per-step clamp; chunk<=20 keeps |exponent| < 88
+
+
+def _chunk_cumsums(logw):
+    """logw: (B,N,L,H,K). Returns inclusive cumsum LW and chunk totals."""
+    lw = jnp.cumsum(logw, axis=2)
+    return lw, lw[:, :, -1]
+
+
+def chunked_linear_attention(r, k, v, logw, *, u: Optional[jax.Array] = None,
+                             post_update: bool = False, chunk: int = 16,
+                             initial_state: Optional[jax.Array] = None
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """r,k: (B,S,H,K); v: (B,S,H,V); logw: (B,S,H,K) (SSD: K-broadcast).
+
+    u: (H,K) bonus (RWKV6).  post_update: SSD semantics (y_t reads S_t).
+    Returns (y (B,S,H,V), final_state (B,H,K,V)).  fp32 throughout.
+    """
+    B, S, H, K = k.shape
+    V = v.shape[-1]
+    L = min(chunk, S)
+    f32 = lambda x: x.astype(jnp.float32)
+    r, k, v = f32(r), f32(k), f32(v)
+    logw = jnp.clip(f32(logw), LOG_DECAY_MIN, 0.0)
+    S_in = S
+    pad = (-S) % L
+    if pad:   # identity-pad the tail: k=0 and decay=1 leave the state fixed
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
+        S += pad
+    N = S // L
+
+    rs = r.reshape(B, N, L, H, K)
+    ks = k.reshape(B, N, L, H, K)
+    vs = v.reshape(B, N, L, H, V)
+    lws = logw.reshape(B, N, L, H, K)
+    lw, lw_tot = _chunk_cumsums(lws)          # inclusive; (B,N,L,H,K),(B,N,H,K)
+    lw_exc = lw - lws                          # exclusive (before step t)
+
+    # per-chunk state contribution  U_n = sum_j exp(lw_tot - lw_j) k_j v_j^T
+    k_dec = ks * jnp.exp(lw_tot[:, :, None] - lw)
+    U = jnp.einsum("bnlhk,bnlhv->bnhkv", k_dec, vs)
+
+    # inter-chunk scan: S_{n+1} = exp(lw_tot_n) * S_n + U_n ; collect starts
+    S0 = jnp.zeros((B, H, K, V), jnp.float32) if initial_state is None \
+        else f32(initial_state)
+
+    def step(s, xs):
+        tot, u_n = xs
+        return jnp.exp(tot)[..., None] * s + u_n, s   # ys = state at chunk start
+
+    lw_tot_t = jnp.moveaxis(lw_tot, 1, 0)     # (N,B,H,K)
+    U_t = jnp.moveaxis(U, 1, 0)               # (N,B,H,K,V)
+    final_state, S_starts = jax.lax.scan(step, S0, (lw_tot_t, U_t))
+    S_starts = jnp.moveaxis(S_starts, 0, 1)   # (B,N,H,K,V)
+
+    # query-side cumulative decay: exclusive for RWKV (pre-update output),
+    # inclusive for SSD (post-update output)
+    lq = lw if post_update else lw_exc
+
+    # cross-chunk term: (r_i * exp(lq_i)) . S_start
+    r_dec = rs * jnp.exp(lq)
+    y_cross = jnp.einsum("bnlhk,bnhkv->bnlhv", r_dec, S_starts)
+
+    # intra-chunk pair term: A_ij = sum_k r_ik e^{lq_i} * k_jk e^{-lw_j}
+    k_idec = ks * jnp.exp(-lw)
+    A = jnp.einsum("bnlhk,bnmhk->bnhlm", r_dec, k_idec)  # (B,N,H,L,L)
+    i_idx = jnp.arange(L)[:, None]
+    j_idx = jnp.arange(L)[None, :]
+    mask = (j_idx <= i_idx) if post_update else (j_idx < i_idx)
+    A = jnp.where(mask[None, None, None], A, 0.0)
+    y_intra = jnp.einsum("bnhlm,bnmhv->bnlhv", A, vs)
+
+    y = y_cross + y_intra
+    if u is not None:   # RWKV6 bonus: diagonal term with u instead of decay
+        diag = jnp.einsum("bnlhk,hk,bnlhk->bnlh", rs, f32(u), ks)
+        y = y + diag[..., None] * vs
+    return y.reshape(B, S, H, V)[:, :S_in], final_state
+
+
+def linear_attention_step(r, k, v, logw, state, *, u=None,
+                          post_update: bool = False):
+    """Single-token decode.  r,k: (B,H,K); v: (B,H,V); state (B,H,K,V)."""
+    f32 = lambda x: x.astype(jnp.float32)
+    r, k, v = f32(r), f32(k), f32(v)
+    w = jnp.exp(jnp.clip(f32(logw), LOG_DECAY_MIN, 0.0))
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    new_state = w[..., None] * state + kv
+    read = new_state if post_update else state
+    y = jnp.einsum("bhk,bhkv->bhv", r, read)
+    if u is not None:
+        y = y + jnp.einsum("bhk,hk->bh", r * k, f32(u))[..., None] * v
+    return y, new_state

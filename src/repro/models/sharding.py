@@ -1,0 +1,104 @@
+"""Logical-axis -> mesh-axis rules and PartitionSpec trees.
+
+Mesh axes: ("data", "model") single pod, ("pod", "data", "model") multi-pod.
+Batch always shards over (pod, data).  Tensor parallelism maps the logical
+axes heads/mlp/vocab/expert onto "model".  FSDP additionally shards the
+"embed" axis of weight matrices over "data" (ZeRO-3: params, grads and
+optimizer states all inherit it).  Sequence parallelism shards activation
+sequence dims over "model" between blocks (with_sharding_constraint).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+from . import params as P_
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    fsdp: bool = False            # shard "embed" weight axis over data
+    expert_parallel: bool = True  # shard "expert" over model when divisible
+    seq_parallel: bool = False    # shard activation seq dim over model
+    data_axes: Tuple[str, ...] = ("data",)   # ("pod","data") multi-pod
+    # FSDP on embed/lm_head tables: good for training (optimizer sharding),
+    # harmful for inference (the token gather cannot shard batch and d over
+    # the same "data" axis -> involuntary full rematerialization in GSPMD).
+    fsdp_vocab_tables: bool = True
+
+    def table(self, cfg: ModelConfig, mesh: Mesh) -> Dict[str, Optional[object]]:
+        model_n = mesh.shape["model"]
+        ep_ok = (self.expert_parallel and cfg.n_experts > 0
+                 and cfg.n_experts % model_n == 0)
+        data_for_fsdp = None
+        if self.fsdp:
+            data_for_fsdp = ("data",)  # never shard weights across pods (DCI)
+        return {
+            "vocab": "model",
+            "heads": "model",
+            # ragged kv-head shards force partial-sum all-reduces: replicate
+            # kv projections unless the head count divides the model axis
+            "kv_heads": "model" if cfg.n_kv_heads % model_n == 0 else None,
+            "mlp": None if ep_ok else "model",
+            "expert": "model" if ep_ok else None,
+            "embed": data_for_fsdp,
+            "kv_lora": None,
+            "layers": None,
+            None: None,
+        }
+
+
+def tree_pspecs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules) -> Dict:
+    """PartitionSpec tree parallel to the params tree.  A dim is sharded only
+    if the rule maps it to a mesh axis whose size divides the dim (e.g. odd
+    vocabs like 49155 fall back to replication)."""
+    table = rules.table(cfg, mesh)
+
+    def leaf(meta: P_.ParamMeta, n):
+        shape = ((n,) + meta.shape) if n else meta.shape
+        axes = (("layers",) + meta.axes) if n else meta.axes
+        assigned = []
+        seen = set()
+        is_vocab_table = "vocab" in axes
+        for dim, ax in zip(shape, axes):
+            mesh_ax = table.get(ax)
+            if ax == "embed" and is_vocab_table and not rules.fsdp_vocab_tables:
+                mesh_ax = None
+            flat = tuple(mesh_ax) if isinstance(mesh_ax, tuple) else (mesh_ax,)
+            size = 1
+            for a in flat:
+                if a is not None:
+                    size *= mesh.shape[a]
+            if (mesh_ax is None or any(a in seen for a in flat)
+                    or dim % size != 0):
+                assigned.append(None)
+            else:
+                assigned.append(mesh_ax)
+                seen.update(flat)
+        return P(*assigned)
+
+    return P_._finalize(cfg, leaf)
+
+
+def tree_shardings(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules) -> Dict:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_pspecs(cfg, mesh, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(rules: ShardingRules) -> P:
+    return P(rules.data_axes)
+
+
+def activation_spec(rules: ShardingRules, with_seq: bool = True) -> P:
+    """(B, S, d) activation spec; seq over model when seq_parallel."""
+    seq = "model" if (rules.seq_parallel and with_seq) else None
+    return P(rules.data_axes, seq, None)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

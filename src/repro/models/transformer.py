@@ -1,0 +1,349 @@
+"""Model forward passes for all 10 architectures.
+
+One scan-over-layers spine (constant compile time in depth) with per-layer
+traced window scalars so mixed local/global attention (gemma3, hymba) shares
+a single scan body.  Modes: "train" (causal, no cache), "prefill" (returns a
+KV cache), "decode" (one token against a cache).  KV caches are stacked along
+a leading layer axis so the same scan consumes them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from .attention import _proj, _rms, attention_block, mla_attention_block
+from .config import ModelConfig
+from .linear_scan import chunked_linear_attention, linear_attention_step
+from .moe import _act, moe_block
+from .sharding import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution context threaded through the forward pass."""
+
+    mesh: Optional[Mesh] = None
+    rules: ShardingRules = dataclasses.field(default_factory=ShardingRules)
+    mla_absorb: bool = False     # §Perf: absorbed-matmul MLA decode
+    moe_impl: str = "auto"       # auto | dense
+
+    @property
+    def data_axes(self):
+        return self.rules.data_axes
+
+
+# ----------------------------------------------------------------- MLP / norm
+
+def mlp(blk, x, cfg: ModelConfig):
+    up = x @ blk["w_in"].astype(x.dtype)
+    gate = x @ blk["w_gate"].astype(x.dtype) if "w_gate" in blk else None
+    return _act(cfg, gate, up) @ blk["w_out"].astype(x.dtype)
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention window (0 = full attention)."""
+    return np.array([0 if cfg.layer_is_global(i) else cfg.window
+                     for i in range(cfg.n_layers)], np.int32)
+
+
+# ------------------------------------------------------------- layer variants
+
+def _rwkv_layer(blk, x, cfg, *, cache, pos):
+    B, S, d = x.shape
+    H, K = cfg.n_heads, cfg.head_dim
+    xn = _rms(x, blk["ln1"], cfg.norm_eps)
+    if cache is None:
+        prev = jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = cache["shift_a"][:, None, :].astype(xn.dtype) if S == 1 else \
+            jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    lerp = lambda m: xn + (prev - xn) * blk[m].astype(xn.dtype)
+    r = _proj(lerp("mix_r"), blk["w_r"]).reshape(B, S, H, K)
+    k = _proj(lerp("mix_k"), blk["w_k"]).reshape(B, S, H, K)
+    v = _proj(lerp("mix_v"), blk["w_v"]).reshape(B, S, H, K)
+    g = jax.nn.silu(_proj(lerp("mix_g"), blk["w_g"]))
+    dec = jnp.tanh(_proj(lerp("mix_w"), blk["decay_a"])) @ \
+        blk["decay_b"].astype(xn.dtype) + blk["decay_base"].astype(xn.dtype)
+    logw = -jnp.exp(dec.astype(jnp.float32)).reshape(B, S, H, K)
+    u = blk["bonus_u"].reshape(H, K)
+    state0 = cache["state"] if cache is not None else None
+    if S == 1 and cache is not None:
+        y, state = linear_attention_step(
+            r[:, 0], k[:, 0], v[:, 0], logw[:, 0], state0, u=u)
+        y = y[:, None]
+    else:
+        y, state = chunked_linear_attention(
+            r, k, v, logw, u=u, post_update=False, chunk=cfg.scan_chunk,
+            initial_state=state0)
+    # per-head group norm
+    y = y.reshape(B, S, H, K)
+    y32 = y.astype(jnp.float32)
+    y = (y32 * jax.lax.rsqrt(jnp.mean(y32 * y32, -1, keepdims=True)
+                             + cfg.norm_eps)).reshape(B, S, H * K)
+    y = y * blk["gn_scale"].astype(jnp.float32)
+    out = _proj(y.astype(x.dtype) * g, blk["wo"])
+    x = x + out
+
+    # channel mix with token shift
+    xn2 = _rms(x, blk["ln2"], cfg.norm_eps)
+    if cache is None or S > 1:
+        prev2 = jnp.pad(xn2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev2 = cache["shift_f"][:, None, :].astype(xn2.dtype)
+    xf = xn2 + (prev2 - xn2) * blk["mix_f"].astype(xn2.dtype)
+    h = jnp.square(jax.nn.relu(xf @ blk["w_in"].astype(xf.dtype)))
+    x = x + h @ blk["w_out"].astype(xf.dtype)
+    new_cache = None if cache is None else {
+        "state": state, "shift_a": xn[:, -1], "shift_f": xn2[:, -1]}
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _ssm_branch(blk, xn, cfg, *, cache):
+    B, S, d = xn.shape
+    H, N, P = cfg.n_heads, cfg.ssm_state, cfg.head_dim
+    xp = _proj(xn, blk["ws_in"]).reshape(B, S, H, P)
+    dt = jax.nn.softplus(_proj(xn, blk["ws_dt"]).astype(jnp.float32)
+                         + blk["dt_bias"].astype(jnp.float32))      # (B,S,H)
+    Bm = _proj(xn, blk["ws_B"]).reshape(B, S, H, N)
+    Cm = _proj(xn, blk["ws_C"]).reshape(B, S, H, N)
+    A = -jnp.exp(blk["A_log"].astype(jnp.float32))                  # (H,)
+    logw = (dt * A)[..., None] * jnp.ones((1, 1, 1, N))             # (B,S,H,N)
+    k = Bm.astype(jnp.float32) * dt[..., None]
+    state0 = cache["ssm"] if cache is not None else None
+    if S == 1 and cache is not None:
+        y, state = linear_attention_step(
+            Cm[:, 0], k[:, 0], xp[:, 0], logw[:, 0], state0, post_update=True)
+        y = y[:, None]
+    else:
+        y, state = chunked_linear_attention(
+            Cm, k, xp, logw, post_update=True, chunk=cfg.scan_chunk,
+            initial_state=state0)
+    y = y + blk["ssm_D"].astype(jnp.float32)[:, None] * xp.astype(jnp.float32)
+    y = y.reshape(B, S, H * P)
+    y = _rms(y.astype(xn.dtype), blk["ssm_norm"], cfg.norm_eps)
+    return _proj(y, blk["ws_out"]), state
+
+
+def _std_layer(blk, x, cfg, rt: Runtime, *, positions, window, cache,
+               cache_pos, cross_kv):
+    """Attention(+SSM branch) + MLP/MoE layer (covers 8 of 10 archs)."""
+    xn = _rms(x, blk["ln1"], cfg.norm_eps)
+    new_cache = {}
+    if cfg.mla:
+        attn, c = mla_attention_block(blk, xn, cfg, positions=positions,
+                                      cache=cache, cache_pos=cache_pos,
+                                      absorb=rt.mla_absorb)
+        if cache is not None:
+            new_cache.update(c)
+    else:
+        attn, c = attention_block(blk, xn, cfg, positions=positions,
+                                  window=window, cache=cache,
+                                  cache_pos=cache_pos)
+        if cache is not None:
+            new_cache.update({k: v for k, v in c.items()})
+    if cfg.ssm:
+        ssm_out, s = _ssm_branch(blk, xn, cfg, cache=cache)
+        attn = (attn + ssm_out) * 0.5   # hymba: mean-combined parallel heads
+        if cache is not None:
+            new_cache["ssm"] = s
+    x = x + attn
+    if cross_kv is not None:
+        xx = _rms(x, blk["ln_x"], cfg.norm_eps)
+        xo, _ = attention_block(blk, xx, cfg, positions=positions, window=0,
+                                cross_states=cross_kv, prefix="x_")
+        x = x + xo
+    xn2 = _rms(x, blk["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "router" in blk:
+        out, aux = moe_block(blk, xn2, cfg, mesh=rt.mesh,
+                             data_axes=rt.data_axes,
+                             norm_topk=cfg.name != "deepseek-v2-lite-16b",
+                             impl=rt.moe_impl)
+    else:
+        out = mlp(blk, xn2, cfg)
+    x = x + out
+    return x, (new_cache or None), aux
+
+
+# -------------------------------------------------------------------- caches
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Dict:
+    """Stacked (leading layer axis) decode cache."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    if cfg.rwkv:
+        return {
+            "state": jnp.zeros((L, batch, cfg.n_heads, cfg.head_dim,
+                                cfg.head_dim), jnp.float32),
+            "shift_a": jnp.zeros((L, batch, cfg.d_model), dtype),
+            "shift_f": jnp.zeros((L, batch, cfg.d_model), dtype),
+        }
+    if cfg.mla:
+        lat = cfg.kv_lora_rank + cfg.rope_head_dim
+        return {"lat": jnp.zeros((L, batch, max_len, lat), dtype)}
+    kv_shape = (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_int8:
+        c = {"k_q": jnp.zeros(kv_shape, jnp.int8),
+             "v_q": jnp.zeros(kv_shape, jnp.int8),
+             "k_s": jnp.ones(kv_shape[:-1] + (1,), jnp.float32),
+             "v_s": jnp.ones(kv_shape[:-1] + (1,), jnp.float32)}
+    else:
+        c = {"k": jnp.zeros(kv_shape, dtype),
+             "v": jnp.zeros(kv_shape, dtype)}
+    if cfg.ssm:
+        c["ssm"] = jnp.zeros((L, batch, cfg.n_heads, cfg.ssm_state,
+                              cfg.head_dim), jnp.float32)
+    return c
+
+
+# ------------------------------------------------------------------- forward
+
+def _run_stack(stack_params, x, cfg, rt, *, positions, windows, cache,
+               cache_pos, cross_kv, layer_fn):
+    """lax.scan over stacked layers; cache (if any) is stacked alongside."""
+    use_cache = cache is not None
+    sp_sharding = None
+    if rt.mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        # batch over data always; seq over model under sequence parallelism.
+        # Constraining the scan carry anchors GSPMD propagation for every
+        # layer (without it one bad reshard poisons the whole stack).
+        seq_ax = "model" if rt.rules.seq_parallel else None
+        sp_sharding = NamedSharding(rt.mesh,
+                                    P(rt.rules.data_axes, seq_ax, None))
+
+    cdt = jnp.dtype(cfg.dtype)
+
+    def body(h, xs):
+        blk, window, csl = xs
+        if sp_sharding is not None:
+            h = jax.lax.with_sharding_constraint(h, sp_sharding)
+        # Cast the LAYER SLICE to compute dtype before any use, then pin the
+        # order with a barrier: the convert must run on the local FSDP shard
+        # so GSPMD gathers bf16 weights (gathering fp32 masters and
+        # converting after doubles the all-gather wire bytes - §Perf).
+        blk = jax.tree.map(
+            lambda w: w.astype(cdt) if w.ndim >= 2 and
+            jnp.issubdtype(w.dtype, jnp.floating) else w, blk)
+        blk = jax.lax.optimization_barrier(blk)
+        h, new_c, aux = layer_fn(blk, h, cfg, rt, positions=positions,
+                                 window=window, cache=csl,
+                                 cache_pos=cache_pos, cross_kv=cross_kv)
+        return h, (new_c, aux)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    n = jax.tree.leaves(stack_params)[0].shape[0]
+    xs = (stack_params, jnp.asarray(windows[:n]), cache)
+    x, (new_cache, auxs) = jax.lax.scan(body, x, xs)
+    return x, new_cache if use_cache else None, jnp.sum(auxs)
+
+
+def forward(params, cfg: ModelConfig, rt: Runtime, tokens: jax.Array, *,
+            mode: str = "train", cache: Optional[Dict] = None,
+            cache_pos=None, frontend_embeds: Optional[jax.Array] = None,
+            enc_embeds: Optional[jax.Array] = None,
+            cross_kv: Optional[Tuple] = None):
+    """tokens: (B, S) int32.  Returns (logits, new_cache, aux_loss).
+
+    frontend_embeds: (B, n_front, d) vision/audio stub prefix (pixtral).
+    enc_embeds: (B, S_enc, d) whisper encoder input (conv-stub frames).
+    cross_kv: precomputed encoder K/V for decode steps.
+    """
+    B, S = tokens.shape
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if frontend_embeds is not None:   # pixtral: patch embeddings prefix
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+        S = x.shape[1]
+    if rt.mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as _P
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(rt.mesh, _P(rt.rules.data_axes, None, None)))
+    pos0 = jnp.asarray(cache_pos if cache_pos is not None else 0, jnp.int32)
+    if pos0.ndim == 1:
+        pos0 = pos0[:, None]   # per-slot depths (continuous batching)
+    positions = pos0 + jnp.arange(S, dtype=jnp.int32)[None, :] \
+        + jnp.zeros((B, 1), jnp.int32)
+    windows = layer_windows(cfg)
+    new_cache = dict(cache) if cache else None
+    enc_out = None
+    if new_cache is not None and "enc_out" in new_cache:
+        enc_out = new_cache.pop("enc_out")   # stashed encoder states (decode)
+        cross_kv = cross_kv if cross_kv is not None else enc_out
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # ---- encoder (whisper): bidirectional stack over stub frame embeddings
+    if cfg.arch_kind == "encdec" and enc_embeds is not None:
+        e = enc_embeds.astype(x.dtype)
+        epos = jnp.arange(e.shape[1], dtype=jnp.int32)[None, :] \
+            + jnp.zeros((B, 1), jnp.int32)
+
+        # bidirectional self-attention == cross-attention onto the layer's
+        # own normed input (positional signal comes from the frontend stub).
+        def enc_layer(blk, h, cfg_, rt_, *, positions, window, cache,
+                      cache_pos, cross_kv):
+            hn = _rms(h, blk["ln1"], cfg_.norm_eps)
+            a, _ = attention_block(blk, hn, cfg_, positions=positions,
+                                   window=0, cross_states=hn)
+            h = h + a
+            hn2 = _rms(h, blk["ln2"], cfg_.norm_eps)
+            return h + mlp(blk, hn2, cfg_), None, jnp.zeros((), jnp.float32)
+
+        e, _, _ = _run_stack(params["enc_layers"], e, cfg, rt, positions=epos,
+                             windows=np.zeros(cfg.n_enc_layers, np.int32),
+                             cache=None, cache_pos=None, cross_kv=None,
+                             layer_fn=enc_layer)
+        e = _rms(e, params["enc_norm"], cfg.norm_eps)
+        cross_kv = e   # decoder layers project per-layer cross K/V from this
+
+    # ---- decoder stack
+    layer_fn = _std_layer
+    if cfg.rwkv:
+        def layer_fn(blk, h, cfg_, rt_, *, positions, window, cache,
+                     cache_pos, cross_kv):
+            return _rwkv_layer(blk, h, cfg_, cache=cache, pos=positions)
+
+    if cfg.first_k_dense:
+        # deepseek: leading dense layers run as their own (short) stack; the
+        # stacked cache is split/recombined along the layer axis.
+        if new_cache is not None:
+            head_c = {k: v[: cfg.first_k_dense] for k, v in new_cache.items()}
+            tail_c = {k: v[cfg.first_k_dense:] for k, v in new_cache.items()}
+        else:
+            head_c = tail_c = None
+        x, head_c, aux0 = _run_stack(params["dense_layers"], x, cfg, rt,
+                                     positions=positions, windows=windows,
+                                     cache=head_c, cache_pos=cache_pos,
+                                     cross_kv=None, layer_fn=layer_fn)
+        x, tail_c, aux1 = _run_stack(params["layers"], x, cfg, rt,
+                                     positions=positions,
+                                     windows=windows[cfg.first_k_dense:],
+                                     cache=tail_c, cache_pos=cache_pos,
+                                     cross_kv=None, layer_fn=layer_fn)
+        aux_total += aux0 + aux1
+        if new_cache is not None:
+            new_cache = {k: jnp.concatenate([head_c[k], tail_c[k]])
+                         for k in head_c}
+    else:
+        xkv = cross_kv if cfg.arch_kind == "encdec" else None
+        x, new_cache, aux = _run_stack(params["layers"], x, cfg, rt,
+                                       positions=positions, windows=windows,
+                                       cache=new_cache, cache_pos=cache_pos,
+                                       cross_kv=xkv, layer_fn=layer_fn)
+        aux_total += aux
+
+    if mode == "prefill":
+        x = x[:, -1:]   # serving only needs next-token logits: never build
+        # the (B, S, vocab) tensor (or gather a replicated lm_head) at 32k
+    x = _rms(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if new_cache is not None and cfg.arch_kind == "encdec":
+        new_cache["enc_out"] = cross_kv if cross_kv is not None else enc_out
+    return logits, new_cache, aux_total

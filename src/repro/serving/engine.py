@@ -1,0 +1,119 @@
+"""Replica inference engine: continuous batching over the model stack.
+
+One ``ReplicaEngine`` = one model replica (a mesh slice in production; the
+host devices in tests).  Fixed slot layout: the KV cache is (L, slots, Smax,
+...); a request occupies one slot from admission to completion, prefill
+writes its slot, and every engine tick decodes one token for all live slots
+(idle slots run masked - the standard continuous-batching schedule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.transformer import Runtime, forward, init_cache
+
+
+@dataclasses.dataclass
+class Sequence:
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+    max_new: int
+    done: bool = False
+
+
+class ReplicaEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 8,
+                 max_len: int = 512, rt: Optional[Runtime] = None,
+                 eos_id: int = 1):
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt or Runtime(mesh=None)
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = init_cache(cfg, slots, max_len)
+        self.seqs: Dict[int, Sequence] = {}
+        self.slot_of: Dict[int, int] = {}
+        self.free = list(range(slots))
+        self.pos = np.zeros(slots, np.int32)
+
+        rtc = self.rt
+
+        @jax.jit
+        def _prefill(params, cache, tokens, slot, pos0):
+            # single-sequence prefill written into one slot of the cache
+            sub = jax.tree.map(
+                lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+                cache)
+            logits, sub, _ = forward(params, cfg, rtc, tokens,
+                                     mode="prefill", cache=sub, cache_pos=0)
+            cache = jax.tree.map(
+                lambda c, s: jax.lax.dynamic_update_slice_in_dim(
+                    c, s.astype(c.dtype), slot, axis=1), cache, sub)
+            return logits[:, -1], cache
+
+        @jax.jit
+        def _decode(params, cache, tokens, lens):
+            # one token for every slot; per-slot positions via cache_pos=0
+            # trick is not enough -> run with per-slot position vector
+            logits, cache, _ = forward(params, cfg, rtc, tokens,
+                                       mode="decode", cache=cache,
+                                       cache_pos=lens)
+            return logits[:, 0], cache
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    # ------------------------------------------------------------------- api
+    @property
+    def n_active(self) -> int:
+        return len(self.seqs)
+
+    def can_admit(self) -> bool:
+        return bool(self.free)
+
+    def admit(self, rid: int, prompt: List[int], max_new: int) -> None:
+        slot = self.free.pop(0)
+        self.slot_of[rid] = slot
+        self.seqs[rid] = Sequence(rid, list(prompt), len(prompt), max_new)
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        logits, self.cache = self._prefill(self.params, self.cache, toks,
+                                           slot, 0)
+        self.pos[slot] = len(prompt)
+        nxt = int(jnp.argmax(logits[0]))
+        self.seqs[rid].tokens.append(nxt)
+        self.pos[slot] += 0   # next token written at decode step
+
+    def step(self) -> List[int]:
+        """Decode one token for every active sequence; returns finished rids."""
+        if not self.seqs:
+            return []
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for rid, seq in self.seqs.items():
+            tokens[self.slot_of[rid], 0] = seq.tokens[-1]
+        lens = jnp.asarray(self.pos)   # per-slot depths
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens), lens)
+        finished = []
+        out = np.asarray(jnp.argmax(logits, -1))
+        for rid, seq in list(self.seqs.items()):
+            s = self.slot_of[rid]
+            seq.tokens.append(int(out[s]))
+            self.pos[s] += 1
+            new = len(seq.tokens) - seq.prompt_len
+            if new >= seq.max_new or int(out[s]) == self.eos_id or \
+                    self.pos[s] >= self.max_len - 1:
+                seq.done = True
+                finished.append(rid)
+                self.free.append(s)
+                del self.seqs[rid]
+                del self.slot_of[rid]
+        return finished

@@ -1,0 +1,133 @@
+"""AdamW with optionally int8-quantized moments (blockwise dynamic scales).
+
+The 8-bit option (bitsandbytes-style, per-row absmax scales) cuts optimizer
+state from 8 to 2 bytes/param - the difference between nemotron-4-340b
+fitting a 256x16GB pod or not (EXPERIMENTS.md §Dry-run).  All state inherits
+the parameter PartitionSpecs (ZeRO-3 via the FSDP rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"      # float32 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+def schedule(opt: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(step / max(opt.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - opt.warmup_steps)
+                    / max(opt.total_steps - opt.warmup_steps, 1), 0.0, 1.0)
+    return opt.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+# ---------------------------------------------------------- int8 quantization
+
+def _quant(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row (last-axis) absmax int8 quantization."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_opt_state(params, opt: OptConfig) -> Dict[str, Any]:
+    def zeros_like_state(p):
+        if opt.state_dtype == "int8":
+            return {"q": jnp.zeros(p.shape, jnp.int8),
+                    "s": jnp.zeros(p.shape[:-1] + (1,), jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros_like_state, params),
+            "v": jax.tree.map(zeros_like_state, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _read(s, opt: OptConfig):
+    return _dequant(s["q"], s["s"]) if opt.state_dtype == "int8" else s
+
+
+def _write(x, opt: OptConfig):
+    if opt.state_dtype == "int8":
+        q, s = _quant(x)
+        return {"q": q, "s": s}
+    return x
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, opt: OptConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, opt.grad_clip / (gnorm + 1e-9))
+    lr = schedule(opt, step)
+    bc1 = 1.0 - opt.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - opt.b2 ** step.astype(jnp.float32)
+
+    def _update(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32, v32 = _read(m, opt), _read(v, opt)
+        m32 = opt.b1 * m32 + (1 - opt.b1) * g
+        v32 = opt.b2 * v32 + (1 - opt.b2) * g * g
+        upd = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + opt.eps)
+        p32 = p.astype(jnp.float32)
+        decay = opt.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p32 - lr * (upd + decay * p32)
+        return new_p.astype(p.dtype), _write(m32, opt), _write(v32, opt)
+
+    def leaf(p, g, m, v):
+        if p.ndim >= 3:
+            # layer-stacked weights: lax.map over the stack axis bounds the
+            # fp32 dequant/update transients to one layer slice (vs. the
+            # whole 96-layer stack for 340B-class models).
+            return jax.lax.map(lambda a: _update(*a), (p, g, m, v))
+        return _update(p, g, m, v)
+
+    is_state_leaf = (lambda x: isinstance(x, dict) and set(x) == {"q", "s"}) \
+        if opt.state_dtype == "int8" else None
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"], is_leaf=is_state_leaf)
+    flat_v = jax.tree.leaves(state["v"], is_leaf=is_state_leaf)
+    out = [leaf(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+def opt_state_pspecs(param_pspecs, opt: OptConfig):
+    """Optimizer-state PartitionSpecs mirroring the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(spec):
+        if opt.state_dtype == "int8":
+            return {"q": spec, "s": P(*spec[:-1], None) if len(spec) else spec}
+        return spec
+    is_spec = lambda x: isinstance(x, P)
+    return {"m": jax.tree.map(leaf, param_pspecs, is_leaf=is_spec),
+            "v": jax.tree.map(leaf, param_pspecs, is_leaf=is_spec),
+            "step": P()}

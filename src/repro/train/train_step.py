@@ -1,0 +1,124 @@
+"""Sharded training step: CE loss, microbatched gradient accumulation
+(lax.scan), clipping, AdamW, mixed precision (bf16 compute / fp32 updates).
+
+The global batch is reshaped to (microbatches, micro, S); gradients
+accumulate in fp32 across the scan so activation memory is bounded by one
+microbatch (the knob that fits nemotron-4-340b on a 16GB chip).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import Runtime, forward
+from .optimizer import OptConfig, adamw_update
+
+Z_LOSS = 1e-4
+AUX_LOSS = 1e-2
+
+
+def batch_keys(cfg: ModelConfig):
+    keys = ["tokens", "labels"]
+    if cfg.frontend == "audio_stub":
+        keys.append("enc_embeds")
+    if cfg.frontend == "vision_stub":
+        keys.append("frontend_embeds")
+    return keys
+
+
+def loss_fn(params, cfg: ModelConfig, rt: Runtime, batch: Dict):
+    # Mixed precision: params are stored fp32 (master) and cast to bf16 at
+    # each use site (models/*._proj), so FSDP all-gathers run in bf16 on the
+    # per-layer slice - no persistent whole-model bf16 copy.
+    extras = {}
+    if "enc_embeds" in batch:
+        extras["enc_embeds"] = batch["enc_embeds"]
+    if "frontend_embeds" in batch:
+        extras["frontend_embeds"] = batch["frontend_embeds"]
+    logits, _, aux = forward(params, cfg, rt, batch["tokens"], mode="train",
+                             **extras)
+    if "frontend_embeds" in batch:   # loss only on the text suffix
+        logits = logits[:, batch["frontend_embeds"].shape[1]:]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    labels = batch["labels"]
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    zl = jnp.sum(jnp.square(lse) * mask) / jnp.maximum(mask.sum(), 1.0)
+    loss = ce + Z_LOSS * zl + AUX_LOSS * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, rt: Runtime, opt: OptConfig,
+                    microbatches: int = 1, accum_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  batch leaves have leading dim == global_batch.
+
+    accum_dtype: gradient-accumulator precision.  bf16 halves the dominant
+    persistent buffer + reduction wire bytes for 340B-class models (the
+    Megatron "grad-reduce-in-bf16" trade-off); fp32 is the default.
+    """
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, rt, b), has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def split(x):
+                m = microbatches
+                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            constrain = None
+            if rt.mesh is not None:
+                # Anchor the gradient accumulator to the parameter shardings:
+                # without this GSPMD all-reduces FULL per-layer gradients and
+                # slices afterwards (2x the wire of a reduce-scatter into the
+                # sharded accumulator) - measured 1.85TB/dev -> §Perf.
+                from jax.sharding import NamedSharding, PartitionSpec
+                from ..models.sharding import tree_pspecs
+                shardings = jax.tree.map(
+                    lambda s: NamedSharding(rt.mesh, s),
+                    tree_pspecs(cfg, rt.mesh, rt.rules),
+                    is_leaf=lambda x: isinstance(x, PartitionSpec))
+                constrain = lambda t: jax.tree.map(
+                    jax.lax.with_sharding_constraint, t, shardings)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                # optimization_barrier keeps the per-microbatch bf16 weight
+                # converts/gathers *inside* the loop body: XLA's while-loop
+                # invariant code motion would otherwise hoist them and
+                # materialize every layer's gathered weights at once.
+                params_l = jax.lax.optimization_barrier(params)
+                (l, parts), g = grad_fn(params_l, mb)
+                if constrain is not None:
+                    g = constrain(g)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + (b / microbatches).astype(a.dtype),
+                    g_acc, g)
+                return (g_acc, l_acc + l), parts
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              params)
+            if constrain is not None:
+                g0 = constrain(g0)
+            (grads, loss), parts = jax.lax.scan(acc, (g0, 0.0), micro)
+            loss = loss / microbatches
+            parts = jax.tree.map(lambda x: x.mean(), parts)
+        params, opt_state, opt_metrics = adamw_update(params, grads,
+                                                      opt_state, opt)
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step

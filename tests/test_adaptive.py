@@ -1,0 +1,59 @@
+"""AdaptiveSwitch (the paper's future-work item 1, implemented):
+invariants + regime behaviour + does-no-harm across the error spectrum."""
+import numpy as np
+import pytest
+
+from repro.core import (get_algorithm, lognormal_predictions, lower_bound,
+                        run)
+from repro.data import make_azure_like_suite
+
+
+@pytest.fixture(scope="module")
+def suite():
+    return make_azure_like_suite(n_instances=4, n_items=1200)
+
+
+def _mean_ratio(name, suite, sigma, **kw):
+    out = []
+    for inst in suite:
+        pd = lognormal_predictions(inst, sigma, seed=3)
+        r = run(inst, get_algorithm(name, **kw), predicted_durations=pd)
+        out.append(r.ratio(lower_bound(inst)))
+    return float(np.mean(out))
+
+
+def test_matches_nrt_under_perfect_predictions(suite):
+    for inst in suite[:2]:
+        pd = lognormal_predictions(inst, 0.0)
+        a = run(inst, get_algorithm("adaptive"), predicted_durations=pd)
+        n = run(inst, get_algorithm("nrt_prioritized"),
+                predicted_durations=pd)
+        # with zero error the switch never leaves NRT
+        assert a.usage_time == pytest.approx(n.usage_time)
+
+
+def test_switches_regimes_under_error(suite):
+    inst = suite[0]
+    pd = lognormal_predictions(inst, 3.0, seed=1)
+    alg = get_algorithm("adaptive")
+    run(inst, alg, predicted_durations=pd)
+    assert alg.regime_switches >= 1
+    assert alg._err > alg.low
+
+
+def test_does_no_harm_across_spectrum(suite):
+    """Adaptive should track the best of its constituents within a margin
+    at every error level (the whole point of the future-work item)."""
+    for sigma in (0.0, 1.0, 4.0):
+        adaptive = _mean_ratio("adaptive", suite, sigma)
+        best_fixed = min(_mean_ratio(n, suite, sigma)
+                         for n in ("nrt_prioritized", "greedy", "first_fit"))
+        assert adaptive <= best_fixed * 1.10, (sigma, adaptive, best_fixed)
+
+
+def test_capacity_invariants_hold(suite):
+    inst = suite[1]
+    pd = lognormal_predictions(inst, 2.0, seed=2)
+    r = run(inst, get_algorithm("adaptive"), predicted_durations=pd)
+    assert np.all(r.placements >= 0)
+    assert r.usage_time >= lower_bound(inst) - 1e-6

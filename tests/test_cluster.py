@@ -1,0 +1,54 @@
+"""Cluster scheduler: placement, failure recovery, work conservation."""
+import numpy as np
+import pytest
+
+from repro.cluster.placement import Job, ClusterScheduler, simulate_cluster
+
+
+def _jobs(n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for j in range(n):
+        demand = np.array([rng.choice([0.25, 0.5, 1.0]),
+                           rng.uniform(0.1, 0.8), rng.uniform(0.05, 0.5),
+                           rng.uniform(0.05, 0.3)])
+        runtime = float(rng.integers(600, 7200))
+        out.append(Job(j, float(rng.integers(0, 36000)), runtime,
+                       np.minimum(demand, 1.0),
+                       predicted_runtime=runtime,
+                       checkpoint_period=300.0))
+    return out
+
+
+def test_no_failures_work_conserved():
+    r = simulate_cluster(_jobs(), "first_fit")
+    assert r["failures_recovered"] == 0
+    assert r["lost_work"] == 0
+    assert r["host_seconds"] > 0
+
+
+def test_failures_recovered_and_bounded_loss():
+    jobs = _jobs()
+    r = simulate_cluster(jobs, "first_fit", mtbf=4000.0, seed=1)
+    assert r["failures_recovered"] > 0
+    # lost work per failure is bounded by the checkpoint period
+    assert r["lost_work"] <= r["failures_recovered"] * 300.0 + 1e-6
+
+
+def test_placement_policies_all_run():
+    jobs = _jobs(25)
+    usages = {}
+    for pol in ["first_fit", "greedy", "nrt_prioritized"]:
+        usages[pol] = simulate_cluster(jobs, pol)["host_seconds"]
+    # clairvoyant policies should not be wildly worse than first fit
+    assert usages["greedy"] <= usages["first_fit"] * 1.5
+
+
+def test_scheduler_gang_release():
+    s = ClusterScheduler("first_fit")
+    j = Job(0, 0.0, 100.0, np.array([1.0, 0.5, 0.5, 0.5]))
+    s.place(j, 0.0)
+    assert s.stats.hosts_opened == 1
+    s.release(0, 100.0)
+    assert s.stats.host_seconds == pytest.approx(100.0)
+    assert not s.pool._open_list

@@ -1,0 +1,111 @@
+"""Unit tests for the DVBP engine, lower bound and hand-checkable algorithms."""
+import numpy as np
+import pytest
+
+from repro.core import (Instance, get_algorithm, lower_bound, run, span)
+
+
+def inst(items, name="t"):
+    """items: list of (sizes, arrival, departure)."""
+    sizes = np.array([i[0] for i in items], float)
+    if sizes.ndim == 1:
+        sizes = sizes[:, None]
+    arr = np.array([i[1] for i in items], float)
+    dep = np.array([i[2] for i in items], float)
+    return Instance(sizes, arr, dep, name).sorted_by_arrival()
+
+
+def test_single_item():
+    i = inst([(0.5, 0.0, 10.0)])
+    r = run(i, get_algorithm("first_fit"))
+    assert r.usage_time == 10.0
+    assert r.n_bins_opened == 1
+    assert lower_bound(i) == 10.0
+    assert span(i) == 10.0
+
+
+def test_lower_bound_ceil():
+    # two 0.6 items overlapping for [5,10): aggregate 1.2 -> 2 bins needed
+    i = inst([(0.6, 0.0, 10.0), (0.6, 5.0, 15.0)])
+    # [0,5): 1 bin, [5,10): 2 bins, [10,15): 1 bin => 5+10+5 = 20
+    assert lower_bound(i) == 20.0
+
+
+def test_first_fit_prefers_earliest():
+    # b0 holds 0.5; b1 opened by 0.9; third 0.4 fits b0 (earliest)
+    i = inst([(0.5, 0.0, 100.0), (0.9, 1.0, 100.0), (0.4, 2.0, 100.0)])
+    r = run(i, get_algorithm("first_fit"))
+    assert r.placements[2] == r.placements[0]
+
+
+def test_best_fit_linf_tightest():
+    # bins at load 0.5 and 0.7; item 0.2 -> linf picks the 0.7 bin
+    i = inst([(0.5, 0.0, 100.0), (0.7, 1.0, 100.0), (0.2, 2.0, 100.0)])
+    r = run(i, get_algorithm("best_fit", norm="linf"))
+    assert r.placements[2] == r.placements[1]
+
+
+def test_next_fit_abandons():
+    # item1 opens b0; item2 (0.8) cannot fit -> b1; item3 (0.1) would fit b0
+    # but Next Fit only considers b1
+    i = inst([(0.5, 0.0, 100.0), (0.8, 1.0, 100.0), (0.1, 2.0, 100.0)])
+    r = run(i, get_algorithm("next_fit"))
+    assert r.placements[2] == r.placements[1] != r.placements[0]
+
+
+def test_rr_next_fit_wraps_around():
+    # cursor sits at b1 (0.8); 0.4 does not fit b1 but RRNF wraps to b0
+    i = inst([(0.5, 0.0, 100.0), (0.8, 1.0, 100.0), (0.4, 2.0, 100.0)])
+    r = run(i, get_algorithm("rr_next_fit"))
+    assert r.placements[2] == r.placements[0]
+
+
+def test_greedy_latest_close():
+    i = inst([(0.3, 0.0, 50.0), (0.3, 1.0, 200.0), (0.3, 2.0, 60.0)])
+    r = run(i, get_algorithm("greedy"))
+    assert r.placements[2] == r.placements[1]   # latest indicated close
+
+
+def test_nrt_prioritized_case_a_first():
+    # bins closing at 50 and 200; item departing at 40: case (a) for both,
+    # nearest is 50
+    i = inst([(0.3, 0.0, 50.0), (0.3, 1.0, 200.0), (0.3, 2.0, 40.0)])
+    r = run(i, get_algorithm("nrt_prioritized"))
+    assert r.placements[2] == r.placements[0]
+
+
+def test_nrt_prioritized_case_b_least_extension():
+    # bins closing at 50 and 45; item departs 100: case (b); extend the 50
+    i = inst([(0.3, 0.0, 50.0), (0.3, 1.0, 45.0), (0.3, 2.0, 100.0)])
+    r = run(i, get_algorithm("nrt_prioritized"))
+    assert r.placements[2] == r.placements[0]
+
+
+def test_cbdt_separates_categories():
+    # two items, same time, departures in different rho-windows
+    i = inst([(0.1, 0.0, 10.0), (0.1, 0.0, 1000.0)])
+    r = run(i, get_algorithm("cbdt", rho=100.0))
+    assert r.placements[0] != r.placements[1]
+    r2 = run(i, get_algorithm("cbdt", rho=10000.0))
+    assert r2.placements[0] == r2.placements[1]
+
+
+def test_multidim_feasibility():
+    # items fit in dim0 but not dim1 jointly
+    i = inst([([0.5, 0.9], 0.0, 10.0), ([0.5, 0.9], 1.0, 10.0)])
+    r = run(i, get_algorithm("first_fit"))
+    assert r.n_bins_opened == 2
+
+
+def test_exact_fit_accepted():
+    i = inst([(0.5, 0.0, 10.0), (0.5, 1.0, 10.0)])
+    r = run(i, get_algorithm("first_fit"))
+    assert r.n_bins_opened == 1
+
+
+def test_usage_time_episodes():
+    # non-overlapping items: two episodes (bin closes in between)
+    i = inst([(0.9, 0.0, 10.0), (0.9, 20.0, 30.0)])
+    r = run(i, get_algorithm("first_fit"))
+    assert r.usage_time == 20.0
+    assert r.n_bins_opened == 2   # closed bins are never reused

@@ -1,0 +1,48 @@
+"""core.jaxsim (TPU-native scan replay) vs the Python oracle engine."""
+import numpy as np
+import pytest
+
+from repro.core import Instance, get_algorithm, run
+from repro.core.jaxsim import POLICIES, simulate
+from repro.data import make_azure_like_suite
+
+
+def quantized_instance(seed=7, n=600, d=4):
+    """Sizes on a 1/64 grid + integer times: fp32-exact, so the jax replay
+    must match the f64 oracle decision-for-decision."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 24, (n, d)) / 64.0
+    arr = np.sort(rng.integers(0, 50000, n)).astype(float)
+    dur = rng.integers(10, 5000, n).astype(float)
+    return Instance(sizes, arr, arr + dur, "quantized").sorted_by_arrival()
+
+
+def _alg(pol):
+    if pol.startswith("best_fit"):
+        return get_algorithm("best_fit", norm=pol.split("_")[-1])
+    return get_algorithm(pol)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_exact_match_on_fp32_exact_instance(policy):
+    inst = quantized_instance()
+    r = run(inst, _alg(policy))
+    j = simulate(inst, policy, max_bins=r.peak_open_bins + 16)
+    assert not j.overflowed
+    assert j.n_bins_opened == r.n_bins_opened
+    assert j.usage_time == pytest.approx(r.usage_time, abs=1e-3)
+
+
+@pytest.mark.parametrize("policy", ["first_fit", "greedy"])
+def test_close_on_general_instance(policy):
+    inst = make_azure_like_suite(n_instances=1, n_items=800)[0]
+    r = run(inst, _alg(policy))
+    j = simulate(inst, policy, max_bins=r.peak_open_bins + 16)
+    # fp32 near-ties may flip individual decisions; quality must agree
+    assert j.usage_time == pytest.approx(r.usage_time, rel=0.05)
+
+
+def test_overflow_flag():
+    inst = quantized_instance(n=100)
+    j = simulate(inst, "first_fit", max_bins=2)
+    assert j.overflowed

@@ -1,0 +1,113 @@
+"""Hypothesis property tests: the system's invariants hold for EVERY
+algorithm on randomized instances.
+
+  * capacity never exceeded in any dimension at any event time
+  * usage time >= span and >= LB/d' sanity; performance ratio >= 1 - eps
+  * Any Fit algorithms never open a new bin when some open bin fits
+  * all bins close; every item placed exactly once
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ANY_FIT, EPS, Instance, get_algorithm, lower_bound,
+                        run, span)
+from repro.core.algorithms import REGISTRY
+
+ALGO_CASES = [
+    ("first_fit", {}), ("mru", {}), ("next_fit", {}), ("rr_next_fit", {}),
+    ("best_fit", {"norm": "l1"}), ("best_fit", {"norm": "l2"}),
+    ("best_fit", {"norm": "linf"}), ("cbdt", {"rho": 16.0}),
+    ("nrt_standard", {}), ("nrt_prioritized", {}), ("greedy", {}),
+    ("cbd", {"beta": 2.0}), ("hybrid", {}), ("reduced_hybrid", {}),
+    ("hybrid_direct_sum", {}), ("reduced_hybrid_direct_sum", {}),
+    ("rcp", {}), ("ppe", {}), ("rcp_modified", {}), ("ppe_modified", {}),
+    ("lifetime_alignment", {"mode": "binary"}),
+    ("lifetime_alignment", {"mode": "geometric"}),
+]
+
+
+@st.composite
+def instances(draw):
+    n = draw(st.integers(3, 40))
+    d = draw(st.integers(1, 4))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    sizes = rng.integers(1, 16, (n, d)) / 16.0
+    arr = np.sort(rng.integers(0, 200, n)).astype(float)
+    dur = rng.integers(1, 100, n).astype(float)
+    return Instance(sizes, arr, arr + dur, "hyp").sorted_by_arrival()
+
+
+class Verifier:
+    """Wraps an algorithm, checking the Any Fit property on every arrival."""
+
+    def __init__(self, algo):
+        self.algo = algo
+        self.any_fit_violations = 0
+
+    def __getattr__(self, name):
+        return getattr(self.algo, name)
+
+    def select_bin(self, arr):
+        pool = self.algo.pool
+        open_idx = pool.open_indices()
+        could_fit = bool(pool.fits_mask(open_idx, arr.size).any())
+        idx = self.algo.select_bin(arr)
+        if idx < 0 and could_fit:
+            self.any_fit_violations += 1
+        return idx
+
+
+@pytest.mark.parametrize("name,kw", ALGO_CASES,
+                         ids=[f"{n}-{'-'.join(map(str, k.values()))}"
+                              if k else n for n, k in ALGO_CASES])
+@settings(max_examples=25, deadline=None)
+@given(inst=instances())
+def test_invariants(name, kw, inst):
+    algo = get_algorithm(name, **kw)
+    is_any_fit = algo.name in ANY_FIT
+    v = Verifier(algo)
+    # engine.place itself asserts the capacity invariant on every placement
+    r = run(inst, v)
+    assert np.all(r.placements >= 0), "every item must be placed"
+    lb = lower_bound(inst)
+    assert r.usage_time >= span(inst) - 1e-6
+    assert r.usage_time >= lb - 1e-6
+    assert r.ratio(lb) >= 1.0 - 1e-9
+    if is_any_fit:
+        assert v.any_fit_violations == 0, \
+            f"{algo.name} claims Any Fit but opened a bin avoidably"
+
+
+@settings(max_examples=15, deadline=None)
+@given(inst=instances(), sigma=st.floats(0.0, 3.0))
+def test_learning_augmented_invariants(inst, sigma):
+    from repro.core import lognormal_predictions
+    pdur = lognormal_predictions(inst, sigma, seed=1)
+    for name in ["ppe_modified", "lifetime_alignment"]:
+        algo = get_algorithm(name) if name != "lifetime_alignment" else \
+            get_algorithm(name, mode="geometric")
+        r = run(inst, algo, predicted_durations=pdur)
+        assert np.all(r.placements >= 0)
+        assert r.usage_time >= span(inst) - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(inst=instances())
+def test_clairvoyant_equals_perfect_prediction(inst):
+    """sigma=0 predictions must reproduce the clairvoyant run exactly."""
+    from repro.core import lognormal_predictions
+    for name in ["greedy", "nrt_prioritized"]:
+        r1 = run(inst, get_algorithm(name))
+        r2 = run(inst, get_algorithm(name),
+                 predicted_durations=lognormal_predictions(inst, 0.0))
+        assert np.array_equal(r1.placements, r2.placements)
+        assert r1.usage_time == pytest.approx(r2.usage_time)
+
+
+@settings(max_examples=20, deadline=None)
+@given(inst=instances())
+def test_lower_bound_monotone_under_subset(inst):
+    lb_all = lower_bound(inst)
+    half = inst.subset(np.arange(inst.n_items) % 2 == 0)
+    assert lower_bound(half) <= lb_all + 1e-9

@@ -1,0 +1,71 @@
+"""Sharding-spec validity for every (arch x rules) combination: each sharded
+dim must divide the mesh axis product (the dry-run's divisibility contract),
+and kv projections must never be ragged-sharded."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.models import params as P_
+from repro.models.sharding import ShardingRules, tree_pspecs
+
+
+class FakeMesh:
+    """shape-only stand-in (tree_pspecs only reads mesh.shape)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESHES = [FakeMesh({"data": 16, "model": 16}),
+          FakeMesh({"pod": 2, "data": 16, "model": 16})]
+RULES = [ShardingRules(fsdp=False),
+         ShardingRules(fsdp=True),
+         ShardingRules(fsdp=True, seq_parallel=True,
+                       data_axes=("pod", "data"))]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("rules", RULES, ids=["tp", "fsdp", "fsdp_mp"])
+def test_specs_divisible(arch, rules):
+    cfg = get_config(arch)
+    mesh = MESHES[1] if "pod" in rules.data_axes else MESHES[0]
+    specs = tree_pspecs(cfg, mesh, rules)
+    shapes = P_.abstract_params(cfg)
+
+    def check(path, spec, arr):
+        assert isinstance(spec, P)
+        assert len(spec) == len(arr.shape) or len(spec) <= len(arr.shape)
+        for dim, ax in zip(arr.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            n = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                n *= mesh.shape[a]
+            assert dim % n == 0, f"{path}: {dim} % {n} != 0 ({ax})"
+
+    jax.tree_util.tree_map_with_path(
+        check, specs, shapes,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "gemma3-12b", "hymba-1.5b"])
+def test_kv_projections_not_ragged(arch):
+    """kv heads (8 or 5) don't divide model=16: wk/wv must be replicated on
+    their head dim (the §Perf it1 fix)."""
+    cfg = get_config(arch)
+    mesh = MESHES[0]
+    specs = tree_pspecs(cfg, mesh, ShardingRules(fsdp=True))
+    wk_spec = specs["layers"]["wk"]
+    assert wk_spec[-1] is None, f"wk head dim must be replicated: {wk_spec}"
+
+
+def test_ep_when_divisible():
+    cfg = get_config("deepseek-v2-lite-16b")   # 64 experts % 16 == 0 -> EP
+    specs = tree_pspecs(cfg, MESHES[0], ShardingRules(fsdp=True))
+    assert specs["layers"]["we_in"][1] == "model"   # (layers, E, d, f)
+    cfg2 = get_config("granite-moe-3b-a800m")  # 40 % 16 != 0 -> expert-TP
+    specs2 = tree_pspecs(cfg2, MESHES[0], ShardingRules(fsdp=True))
+    assert specs2["layers"]["we_in"][1] is None
+    assert specs2["layers"]["we_in"][3] == "model"

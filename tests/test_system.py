@@ -1,0 +1,149 @@
+"""End-to-end behaviour + paper-claim validation (DESIGN.md §1.4).
+
+Asserts the paper's qualitative experimental findings hold on the synthetic
+Azure-like family (fixed seeds; means over instances; weak inequalities with
+margins, since the suite is smaller than the paper's 28 instances)."""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import (get_algorithm, lognormal_predictions, lower_bound,
+                        run)
+from repro.data import make_azure_like_suite
+
+N_INST, N_ITEMS = 6, 1500
+
+
+@functools.lru_cache()
+def suite():
+    return tuple(make_azure_like_suite(n_instances=N_INST, n_items=N_ITEMS))
+
+
+@functools.lru_cache()
+def lbs():
+    return tuple(lower_bound(i) for i in suite())
+
+
+def mean_ratio(factory, sigma=None, seed=0):
+    out = []
+    for inst, lb in zip(suite(), lbs()):
+        pdur = None if sigma is None else \
+            lognormal_predictions(inst, sigma, seed=seed)
+        r = run(inst, factory(), predicted_durations=pdur)
+        out.append(r.ratio(lb))
+    return float(np.mean(out))
+
+
+A = lambda name, **kw: (lambda: get_algorithm(name, **kw))
+
+
+def test_ratios_at_least_one():
+    for name in ["first_fit", "greedy", "reduced_hybrid"]:
+        assert mean_ratio(A(name)) >= 1.0
+
+
+def test_claim_first_fit_best_nonclairvoyant():
+    """Paper Fig. 3: First Fit has the lowest mean among non-clairvoyant."""
+    ff = mean_ratio(A("first_fit"))
+    for other in ["mru", "next_fit", "rr_next_fit"]:
+        assert ff <= mean_ratio(A(other)) + 0.02
+
+
+def test_claim_any_fit_feature_rrnf_beats_nf():
+    """Paper Fig. 3: Round-Robin Next Fit dramatically improves Next Fit."""
+    assert mean_ratio(A("rr_next_fit")) < mean_ratio(A("next_fit")) - 0.3
+
+
+def test_claim_prioritized_nrt_beats_standard():
+    """Paper Fig. 5."""
+    assert mean_ratio(A("nrt_prioritized")) < mean_ratio(A("nrt_standard"))
+
+
+def test_claim_prioritized_nrt_best_clairvoyant():
+    """Paper Fig. 8: Prioritized NRT leads the clairvoyant field."""
+    nrt = mean_ratio(A("nrt_prioritized"))
+    for other in [A("greedy"), A("cbd", beta=2.0), A("reduced_hybrid"),
+                  A("cbdt", rho=21600.0)]:
+        assert nrt <= mean_ratio(other) + 0.02
+
+
+def test_claim_departure_time_beats_duration_clairvoyant():
+    """Paper Fig. 8: departure-time algorithms beat duration algorithms."""
+    dep = min(mean_ratio(A("nrt_prioritized")), mean_ratio(A("greedy")))
+    dur = min(mean_ratio(A("cbd", beta=2.0)), mean_ratio(A("reduced_hybrid")))
+    assert dep < dur
+
+
+def test_claim_reduced_hybrid_beats_hybrid_and_direct_sum():
+    """Paper Fig. 7."""
+    rh = mean_ratio(A("reduced_hybrid"))
+    assert rh <= mean_ratio(A("hybrid")) + 0.02
+    assert rh < mean_ratio(A("reduced_hybrid_direct_sum"))
+    assert mean_ratio(A("hybrid")) < mean_ratio(A("hybrid_direct_sum")) + 0.02
+
+
+def test_claim_modified_rcp_ppe_no_worse():
+    """Paper Fig. 10: removing large bins improves RCP/PPE."""
+    for sigma in (0.5, 2.0):
+        assert mean_ratio(A("rcp_modified"), sigma=sigma) <= \
+            mean_ratio(A("rcp"), sigma=sigma) + 0.03
+        assert mean_ratio(A("ppe_modified"), sigma=sigma) <= \
+            mean_ratio(A("ppe"), sigma=sigma) + 0.03
+
+
+def test_claim_ppe_approaches_first_fit_at_huge_error():
+    """Paper Fig. 10: PPE's threshold grows with error -> behaves like FF."""
+    ff = mean_ratio(A("first_fit"))
+    ppe = mean_ratio(A("ppe_modified"), sigma=4.0)
+    assert ppe <= ff * 1.15
+
+
+def test_claim_greedy_more_robust_than_nrt():
+    """Paper Fig. 12: Greedy (conservative) degrades slower than
+    Prioritized NRT (aggressive) as errors grow."""
+    d_nrt = mean_ratio(A("nrt_prioritized"), sigma=2.0) - \
+        mean_ratio(A("nrt_prioritized"))
+    d_greedy = mean_ratio(A("greedy"), sigma=2.0) - mean_ratio(A("greedy"))
+    assert d_greedy <= d_nrt + 0.02
+
+
+def test_claim_cbdt_less_robust_than_cbd():
+    """Paper Fig. 9: departure-time classification degrades faster with
+    error than duration classification."""
+    d_cbdt = mean_ratio(A("cbdt", rho=21600.0), sigma=2.0) - \
+        mean_ratio(A("cbdt", rho=21600.0))
+    d_cbd = mean_ratio(A("cbd", beta=2.0), sigma=2.0) - \
+        mean_ratio(A("cbd", beta=2.0))
+    assert d_cbd <= d_cbdt + 0.05
+
+
+def test_claim_clairvoyant_beats_nonclairvoyant():
+    assert mean_ratio(A("nrt_prioritized")) < mean_ratio(A("first_fit"))
+
+
+def test_end_to_end_training_improves_loss():
+    """(b)-grade check: the quickstart trainer actually learns."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.config import ModelConfig
+    from repro.models import params as P_
+    from repro.models.transformer import Runtime
+    from repro.train.optimizer import OptConfig, init_opt_state
+    from repro.train.train_step import make_train_step
+    from repro.data.tokens import TokenStream
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab=256, dtype="float32", attn_q_chunk=64)
+    opt = OptConfig(lr=3e-3, warmup_steps=3, total_steps=30)
+    p = P_.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    state = init_opt_state(p, opt)
+    fn = jax.jit(make_train_step(cfg, Runtime(mesh=None), opt),
+                 donate_argnums=(0, 1))
+    stream = TokenStream(cfg.vocab, 64, 8)
+    losses = []
+    for step in range(30):
+        p, state, m = fn(p, state, jax.tree.map(jnp.asarray,
+                                                stream.batch(step)))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < losses[0] - 0.5

@@ -1,0 +1,152 @@
+"""Training substrate: optimizer (int8 states), grad accumulation,
+checkpointing, elastic resume, gradient compression."""
+import dataclasses
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models import params as P_
+from repro.models.transformer import Runtime
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import (OptConfig, adamw_update, init_opt_state,
+                                   opt_state_pspecs)
+from repro.train.train_step import make_train_step
+from repro.data.tokens import TokenStream
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=512,
+                  dtype="float32", attn_q_chunk=64)
+RT = Runtime(mesh=None)
+
+
+def test_adamw_minimizes_quadratic():
+    for state_dtype in ("float32", "int8"):
+        opt = OptConfig(lr=0.1, weight_decay=0.0, state_dtype=state_dtype,
+                        warmup_steps=1, total_steps=200)
+        params = {"w": jnp.array([[4.0, -3.0], [2.0, 5.0]])}
+        state = init_opt_state(params, opt)
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}     # d/dw ||w||^2
+            params, state, _ = adamw_update(params, grads, state, opt)
+        assert float(jnp.abs(params["w"]).max()) < 0.3, state_dtype
+
+
+def test_int8_state_roundtrip_quality():
+    from repro.train.optimizer import _dequant, _quant
+    x = np.random.default_rng(0).normal(size=(64, 256)).astype(np.float32)
+    q, s = _quant(jnp.asarray(x))
+    err = np.abs(np.asarray(_dequant(q, s)) - x).max()
+    assert err <= np.abs(x).max() / 127.0 + 1e-7
+
+
+def test_grad_accumulation_equivalence():
+    """microbatches=4 must match microbatches=1 up to accumulation order."""
+    p = P_.init_params(jax.random.PRNGKey(0), CFG, dtype=jnp.float32)
+    opt = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    stream = TokenStream(CFG.vocab, 32, 8)
+    batch = jax.tree.map(jnp.asarray, stream.batch(0))
+    outs = []
+    for mb in (1, 4):
+        state = init_opt_state(p, opt)
+        step = make_train_step(CFG, RT, opt, microbatches=mb)
+        p2, _, m = jax.jit(step)(p, state, batch)
+        outs.append((p2, float(m["loss"])))
+    assert outs[0][1] == pytest.approx(outs[1][1], rel=1e-5)
+    for a, b in zip(jax.tree.leaves(outs[0][0]), jax.tree.leaves(outs[1][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    state = {"a": jnp.arange(12.0).reshape(3, 4),
+             "b": {"c": jnp.ones(5, jnp.int32)}}
+    for step in (10, 20, 30):
+        ck.save(step, state)
+    assert ck.all_steps() == [20, 30]            # GC kept last 2
+    step, restored = ck.restore(jax.eval_shape(lambda: state))
+    assert step == 30
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async(tmp_path):
+    ck = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    state = {"w": jnp.ones((128, 128))}
+    ck.save(5, state)
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+def test_opt_state_pspecs_mirror_params():
+    from jax.sharding import PartitionSpec as P
+    opt = OptConfig(state_dtype="int8")
+    pspecs = {"w": P("data", "model"), "b": P(None)}
+    os = opt_state_pspecs(pspecs, opt)
+    assert os["m"]["w"]["q"] == P("data", "model")
+    assert os["m"]["w"]["s"] == P("data", None)
+    assert os["step"] == P()
+
+
+def test_grad_compression_error_feedback():
+    from repro.train.grad_compress import _quant as gq
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(8, 1024)).astype(np.float32) * 1e-3
+    err = np.zeros_like(g)
+    # accumulated dequantized updates track the true sum thanks to feedback
+    total_true = np.zeros_like(g)
+    total_sent = np.zeros_like(g)
+    for t in range(50):
+        gt = rng.normal(size=g.shape).astype(np.float32) * 1e-3
+        total_true += gt
+        x = gt + err
+        q, s = gq(jnp.asarray(x))
+        deq = np.asarray(q, np.float32) * np.asarray(s)
+        err = x - deq
+        total_sent += deq
+    drift = np.abs(total_sent - total_true).max()
+    assert drift <= np.abs(total_true).max() * 0.02 + 1e-5
+
+
+def test_elastic_resume_exact(tmp_path):
+    from repro.train.elastic import ElasticConfig, ElasticTrainer
+    from repro.launch.mesh import make_host_mesh
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=30)
+    stream = TokenStream(CFG.vocab, 32, 4)
+
+    def make_state():
+        p = P_.init_params(jax.random.PRNGKey(0), CFG, dtype=jnp.float32)
+        return (p, init_opt_state(p, opt))
+
+    def make_step(mesh):
+        fn = make_train_step(CFG, Runtime(mesh=None), opt, microbatches=1)
+
+        @jax.jit
+        def step(state, batch):
+            p, o = state
+            p, o, m = fn(p, o, batch)
+            return (p, o), m
+        return step, None
+
+    def batch_fn(step):
+        return jax.tree.map(jnp.asarray, stream.batch(step))
+
+    a = ElasticTrainer(make_state, make_step, batch_fn,
+                       str(tmp_path / "a"), ElasticConfig(ckpt_every=5))
+    a.attach(make_host_mesh())
+    ref = float(a.run(20)["loss"])
+
+    b = ElasticTrainer(make_state, make_step, batch_fn,
+                       str(tmp_path / "b"), ElasticConfig(ckpt_every=5))
+    b.attach(make_host_mesh())
+    with pytest.raises(RuntimeError):
+        b.run(20, fail_at=13)
+    b2 = ElasticTrainer(make_state, make_step, batch_fn,
+                        str(tmp_path / "b"), ElasticConfig(ckpt_every=5))
+    b2.attach(make_host_mesh())
+    assert b2.step == 10
+    got = float(b2.run(20 - b2.step)["loss"])
+    assert got == pytest.approx(ref, abs=1e-6)
