@@ -7,6 +7,12 @@ bound).  Scale knobs: BENCH_INSTANCES (default 12), BENCH_ITEMS (default
 2500), BENCH_REPEATS (default 1) - the paper uses 28 Azure instances; raise
 the knobs to reproduce at full scale.  If the real Azure trace is present
 under data/azure/, it is used instead of the synthetic family.
+
+Policies in ``jaxsim.POLICIES`` (the score-based Any Fit family) are driven
+through the batched sweep runner (``repro.sweep``): the whole suite - and,
+for noise sweeps, all seeds - replays as one vmapped scan per policy.
+Category-structured policies (hybrid, RCP/PPE, CBD...) keep the host oracle
+path.  Set BENCH_SWEEP=0 to force everything through the oracle.
 """
 from __future__ import annotations
 
@@ -18,13 +24,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import (BoxStats, get_algorithm, lognormal_predictions,
-                        lower_bound, run, uniform_predictions)
+                        lognormal_predictions_batch, lower_bound, run,
+                        uniform_predictions, uniform_predictions_batch)
+from repro.core.jaxsim import POLICIES as JAXSIM_POLICIES
 from repro.data import load_azure_csv, make_azure_like_suite, \
     make_huawei_like_suite
 
 N_INSTANCES = int(os.environ.get("BENCH_INSTANCES", "12"))
 N_ITEMS = int(os.environ.get("BENCH_ITEMS", "2500"))
 REPEATS = int(os.environ.get("BENCH_REPEATS", "1"))
+USE_SWEEP = os.environ.get("BENCH_SWEEP", "1") != "0"
 
 
 @functools.lru_cache()
@@ -43,10 +52,56 @@ def huawei_suite():
                                         n_items=max(N_ITEMS // 2, 500)))
 
 
+def _suite(suite_name: str):
+    return azure_suite() if suite_name == "azure" else huawei_suite()
+
+
 @functools.lru_cache()
 def _lb(suite_name: str, idx: int) -> float:
-    suite = azure_suite() if suite_name == "azure" else huawei_suite()
-    return lower_bound(suite[idx])
+    return lower_bound(_suite(suite_name)[idx])
+
+
+@functools.lru_cache()
+def _packed(suite_name: str):
+    from repro.sweep import pack_instances
+    return pack_instances(list(_suite(suite_name)))
+
+
+def _jaxsim_policy(name: str, kw: Dict) -> Optional[str]:
+    """jaxsim policy string for (registry name, kwargs), or None if the
+    algorithm is category-structured and must run on the host oracle."""
+    if name == "best_fit" and set(kw) <= {"norm"}:
+        return f"best_fit_{kw.get('norm', 'linf')}"
+    if name in JAXSIM_POLICIES and not kw:
+        return name
+    return None
+
+
+def alg(name: str, **kw):
+    f = lambda: get_algorithm(name, **kw)
+    f.jaxsim_policy = _jaxsim_policy(name, kw)
+    return f
+
+
+def _evaluate_batched(policy: str, suite: str, sigma: Optional[float],
+                      eps: Optional[float], seeds: Sequence[int]
+                      ) -> Tuple[List[float], float]:
+    from repro.sweep import pad_predictions, run_batch
+    insts = _suite(suite)
+    batch = _packed(suite)
+    preds = None
+    if sigma is not None:
+        preds = [lognormal_predictions_batch(i, sigma, seeds) for i in insts]
+    elif eps is not None:
+        preds = [uniform_predictions_batch(i, eps, seeds) for i in insts]
+    t0 = time.time()
+    pdeps = None if preds is None else pad_predictions(batch, preds)
+    res = run_batch(batch, policy, pdeps, max_bins=64)
+    n_runs = res.usage_time.size
+    secs = (time.time() - t0) / max(n_runs, 1)
+    ratios = [float(np.mean(res.usage_time[i] / _lb(suite, i)))
+              for i in range(batch.B)]
+    return ratios, secs
 
 
 def evaluate(algorithm_factory, *, suite: str = "azure",
@@ -55,7 +110,10 @@ def evaluate(algorithm_factory, *, suite: str = "azure",
     """Run a factory()-fresh algorithm over the suite.
 
     Returns (per-instance mean ratios, wall seconds per run)."""
-    insts = azure_suite() if suite == "azure" else huawei_suite()
+    policy = getattr(algorithm_factory, "jaxsim_policy", None)
+    if USE_SWEEP and policy in JAXSIM_POLICIES:
+        return _evaluate_batched(policy, suite, sigma, eps, seeds)
+    insts = _suite(suite)
     ratios = []
     t0 = time.time()
     n_runs = 0
@@ -83,7 +141,3 @@ def box_row(name: str, ratios: List[float], secs: float) -> str:
     st = BoxStats.from_ratios(ratios)
     return (f"{name},{secs*1e6:.0f},{st.mean:.4f}  "
             f"# median={st.median:.3f} q1={st.q1:.3f} q3={st.q3:.3f}")
-
-
-def alg(name: str, **kw):
-    return lambda: get_algorithm(name, **kw)

@@ -71,6 +71,44 @@ def jaxsim_vs_oracle() -> List[str]:
     return rows
 
 
+def sweep_grid(n_instances: int = 28, n_items: int = 250,
+               policies=("first_fit", "best_fit_l2", "greedy",
+                         "nrt_prioritized")) -> List[str]:
+    """Batched sweep runner vs the per-instance simulate() loop on an
+    n_instances x len(policies) grid.  The loop path re-traces per instance
+    (every instance has its own event-tensor shape); the batched path
+    compiles once per policy.  Wall clock includes compilation for both -
+    that is the real cost of evaluating a fresh grid."""
+    from repro.core.jaxsim import simulate
+    from repro.data import make_azure_like_suite
+    from repro.sweep import pack_instances, run_batch
+    insts = make_azure_like_suite(n_instances=n_instances, n_items=n_items,
+                                  seed=11)
+    grid = n_runs = n_instances * len(policies)
+
+    t0 = time.time()
+    loop_usage = 0.0
+    for p in policies:
+        for inst in insts:
+            loop_usage += simulate(inst, p, max_bins=64).usage_time
+    t_loop = time.time() - t0
+
+    t0 = time.time()
+    batch = pack_instances(insts)
+    batch_usage = 0.0
+    for p in policies:
+        batch_usage += float(run_batch(batch, p, max_bins=64)
+                             .usage_time.sum())
+    t_batch = time.time() - t0
+
+    tag = f"{n_instances}x{len(policies)}"
+    return [f"perf/sweep_loop_{tag},{t_loop/n_runs*1e6:.0f},{loop_usage:.0f}",
+            f"perf/sweep_batched_{tag},{t_batch/n_runs*1e6:.0f},"
+            f"{batch_usage:.0f}",
+            f"perf/sweep_speedup_{tag},{t_batch*1e6:.0f},"
+            f"{t_loop/t_batch:.2f}"]
+
+
 def serving_fleet() -> List[str]:
     from repro.serving.fleet import attach_predictions, simulate_fleet, \
         synth_requests

@@ -3,12 +3,35 @@
 # figure benches, throughput/quality for perf benches.
 #
 #   PYTHONPATH=src python -m benchmarks.run [--only figN] [--skip-perf]
+#       [--fast] [--json BENCH_sweep.json]
 #   Scale knobs: BENCH_INSTANCES / BENCH_ITEMS / BENCH_REPEATS env vars.
+#
+# --fast: smoke mode (small suites, a figure subset, a small sweep grid) -
+#   used by tests/test_benchmarks_smoke.py to keep the benches runnable.
+# --json PATH: also emit every row as machine-readable JSON
+#   [{"name", "us_per_call", "derived"}, ...] so the perf trajectory can be
+#   tracked across PRs (see BENCH_sweep.json at the repo root).
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+FAST_FIGURES = ("fig2", "fig5")
+
+
+def _parse_row(line: str):
+    head = line.split("#", 1)[0].strip().rstrip(",")
+    parts = head.split(",")
+    if len(parts) != 3:
+        return None
+    try:
+        return {"name": parts[0], "us_per_call": float(parts[1]),
+                "derived": float(parts[2])}
+    except ValueError:
+        return None
 
 
 def main() -> None:
@@ -16,7 +39,22 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--skip-perf", action="store_true")
     ap.add_argument("--skip-figures", action="store_true")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="", metavar="PATH")
     args = ap.parse_args()
+
+    if args.fast:   # must happen before benchmarks.common is imported
+        os.environ.setdefault("BENCH_INSTANCES", "4")
+        os.environ.setdefault("BENCH_ITEMS", "300")
+        os.environ.setdefault("BENCH_REPEATS", "1")
+
+    rows = []
+
+    def emit(line: str) -> None:
+        print(line, flush=True)
+        parsed = _parse_row(line)
+        if parsed:
+            rows.append(parsed)
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -25,18 +63,36 @@ def main() -> None:
         for fn in figures.ALL_FIGURES:
             if args.only and args.only not in fn.__name__:
                 continue
+            if args.fast and not args.only and \
+                    not fn.__name__.startswith(FAST_FIGURES):
+                continue
             for line in fn():
-                print(line, flush=True)
+                emit(line)
     if not args.skip_perf and not args.only:
         from . import perf
-        for group in (perf.kernels, perf.jaxsim_vs_oracle,
-                      perf.serving_fleet, perf.roofline_summary):
+        groups = [perf.kernels, perf.jaxsim_vs_oracle, perf.serving_fleet,
+                  perf.sweep_grid, perf.roofline_summary]
+        if args.fast:
+            groups = [lambda: perf.sweep_grid(n_instances=6, n_items=120,
+                                              policies=("first_fit",
+                                                        "greedy"))]
+        for group in groups:
             try:
                 for line in group():
-                    print(line, flush=True)
+                    emit(line)
             except Exception as e:   # keep the harness robust
-                print(f"# {group.__name__} failed: {e}", file=sys.stderr)
+                print(f"# {getattr(group, '__name__', 'group')} failed: {e}",
+                      file=sys.stderr)
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows,
+                       "env": {k: os.environ[k] for k in
+                               ("BENCH_INSTANCES", "BENCH_ITEMS",
+                                "BENCH_REPEATS") if k in os.environ}},
+                      f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

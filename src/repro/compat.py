@@ -1,0 +1,20 @@
+"""Version shims for the pinned jax.
+
+``shard_map``: jax >= 0.6 exposes it at the top level and renames the
+replication-check kwarg to ``check_vma``; jax 0.4.x has it under
+``jax.experimental.shard_map`` with ``check_rep``.  Callers use the new
+spelling and this wrapper translates.
+"""
+from __future__ import annotations
+
+try:
+    from jax import shard_map as _shard_map
+    _SHARD_CHECK_KW = "check_vma"
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_SHARD_CHECK_KW: check_vma})

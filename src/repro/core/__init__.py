@@ -11,7 +11,9 @@ from .types import EPS, Arrival, Instance, PackingResult  # noqa: F401
 from .engine import run  # noqa: F401
 from .lower_bound import lower_bound, span  # noqa: F401
 from .metrics import BoxStats, summarize  # noqa: F401
-from .predictions import lognormal_predictions, uniform_predictions  # noqa: F401
+from .predictions import (lognormal_predictions,  # noqa: F401
+                          lognormal_predictions_batch, uniform_predictions,
+                          uniform_predictions_batch)
 from .algorithms import (ALL_ALGORITHMS, ANY_FIT, CLAIRVOYANT,  # noqa: F401
                          LEARNING_AUGMENTED, NON_CLAIRVOYANT, REGISTRY,
                          Algorithm, get_algorithm)

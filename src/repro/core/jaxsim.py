@@ -14,6 +14,18 @@ RCP/PPE) stay on the host engine.
 Closed slots are reused; usage time accrues per open episode, so results
 match the paper's semantics exactly (validated against the oracle in
 tests/test_jaxsim.py).
+
+The replay core (``_replay``) is written to be ``jax.vmap``-able so that
+``repro.sweep`` can evaluate a whole padded batch of instances (and a batch
+of prediction arrays per instance) in one fused scan-over-batch:
+
+  * events with ``kind == PAD_KIND`` are no-ops (the carry passes through
+    unchanged), which is how shorter instances ride in a ``(B, 2 n_max)``
+    event tensor;
+  * an optional per-instance ``dmask`` marks which of the (padded) size
+    dimensions are real, so best-fit scores ignore zero-padded dimensions
+    (zero-size dims are always feasible but would otherwise poison the
+    l_inf residual score).
 """
 from __future__ import annotations
 
@@ -32,6 +44,19 @@ POLICIES = ("first_fit", "best_fit_l1", "best_fit_l2", "best_fit_linf",
 NEG = -1e30
 BIG = 1e30
 
+# Event kinds in the precomputed sequence.
+ARRIVAL_KIND = 1
+DEPARTURE_KIND = 0
+PAD_KIND = -1
+
+# Slot-pool escalation schedule shared by simulate() and repro.sweep.runner.
+MAX_BINS_CAP = 65536
+
+
+def grow_max_bins(max_bins: int, cap: int = MAX_BINS_CAP) -> int:
+    """Next rung of the overflow-escalation ladder (doubling, capped)."""
+    return min(max(2 * max_bins, 1), cap)
+
 
 @dataclasses.dataclass
 class JaxSimResult:
@@ -39,14 +64,20 @@ class JaxSimResult:
     n_bins_opened: int
     placements: np.ndarray
     overflowed: bool
+    max_bins: int = 0   # slot-pool size that produced this result
 
 
 F32_EPS = 1e-6   # fp32-appropriate capacity tolerance (oracle uses 1e-9/f64)
 
 
 def _score(policy: str, loads, alive, open_seq, access_seq, closes, size,
-           pdep, now):
-    """Lower is better; +BIG means infeasible."""
+           pdep, now, dmask=None):
+    """Lower is better; +BIG means infeasible.
+
+    ``dmask`` (d,) marks real dimensions when sizes are zero-padded to a
+    common d; zero-size padded dims never affect feasibility but must be
+    excluded from the best-fit residual norms.
+    """
     feasible = jnp.all(size[None, :] <= 1.0 - loads + F32_EPS, axis=1) & alive
     if policy == "first_fit":
         s = open_seq.astype(jnp.float32)
@@ -55,10 +86,14 @@ def _score(policy: str, loads, alive, open_seq, access_seq, closes, size,
     elif policy.startswith("best_fit"):
         after = 1.0 - loads - size[None, :]
         if policy.endswith("l1"):
+            after = after if dmask is None else after * dmask
             s = after.sum(1)
         elif policy.endswith("l2"):
+            after = after if dmask is None else after * dmask
             s = jnp.sqrt(jnp.sum(after * after, 1))
         else:
+            if dmask is not None:
+                after = jnp.where(dmask > 0, after, NEG)
             s = after.max(1)
     elif policy == "greedy":
         s = -jnp.maximum(closes, now)
@@ -75,9 +110,10 @@ def _score(policy: str, loads, alive, open_seq, access_seq, closes, size,
     return jnp.where(feasible, s, BIG)
 
 
-@partial(jax.jit, static_argnames=("policy", "max_bins"))
-def _simulate(sizes, times, kinds, items, pdeps, *, policy: str,
-              max_bins: int):
+def _replay(sizes, times, kinds, items, pdeps, dmask, *, policy: str,
+            max_bins: int):
+    """One instance's event replay; pure function of its array arguments,
+    safe to ``jax.vmap`` over a leading batch axis of every argument."""
     n_slots = max_bins
     d = sizes.shape[1]
 
@@ -87,7 +123,8 @@ def _simulate(sizes, times, kinds, items, pdeps, *, policy: str,
         t, kind, j = ev
         j = j.astype(jnp.int32)
         size = sizes[j]
-        is_arr = kind == 1
+        is_arr = kind == ARRIVAL_KIND
+        is_pad = kind == PAD_KIND
 
         # ---- departure branch data
         b_dep = placements[j]
@@ -104,7 +141,7 @@ def _simulate(sizes, times, kinds, items, pdeps, *, policy: str,
 
         # ---- arrival branch data
         s = _score(policy, loads, alive, open_seq, access_seq, closes,
-                   size, pdeps[j], t)
+                   size, pdeps[j], t, dmask)
         # two-stage selection: min score, ties broken by opening order (the
         # oracle iterates open bins in opening order and takes the first)
         smin = jnp.min(s)
@@ -133,13 +170,17 @@ def _simulate(sizes, times, kinds, items, pdeps, *, policy: str,
 
         pick = lambda a_val, d_val: jax.tree.map(
             lambda x, y: jnp.where(is_arr, x, y), a_val, d_val)
-        carry = pick(
+        new = pick(
             (loads_arr, counts_arr, alive_arr, open_seq_arr, access_arr,
              closes_arr, open_time_arr, placements_arr, usage, seq + 1,
              opened_arr, overflow_arr),
             (loads_dep, counts_dep, alive_dep, open_seq, access_seq,
              closes_dep, open_time, placements, usage_dep, seq, opened,
              overflow))
+        # padded events are no-ops: the carry passes through untouched
+        carry = jax.tree.map(lambda new_x, old_x: jnp.where(is_pad, old_x,
+                                                            new_x),
+                             new, carry)
         return carry, None
 
     n = sizes.shape[0]
@@ -152,21 +193,47 @@ def _simulate(sizes, times, kinds, items, pdeps, *, policy: str,
     return carry[8], carry[10], carry[7], carry[11]
 
 
-def simulate(inst: Instance, policy: str = "first_fit",
-             predicted_durations: Optional[np.ndarray] = None,
-             max_bins: int = 256) -> JaxSimResult:
-    assert policy in POLICIES, policy
+@partial(jax.jit, static_argnames=("policy", "max_bins"))
+def _simulate(sizes, times, kinds, items, pdeps, *, policy: str,
+              max_bins: int):
+    return _replay(sizes, times, kinds, items, pdeps, None,
+                   policy=policy, max_bins=max_bins)
+
+
+def event_sequence(inst: Instance):
+    """(times, kinds, items) int32/float arrays, departures sorted before
+    arrivals at equal times (half-open [arrival, departure) intervals).
+    Shared by simulate() and the repro.sweep batching layer."""
     n = inst.n_items
-    pdeps = inst.departures if predicted_durations is None \
-        else inst.arrivals + predicted_durations
-    # event sequence: departures sort before arrivals at equal times
     times = np.concatenate([inst.arrivals, inst.departures])
-    kinds = np.concatenate([np.ones(n, np.int32), np.zeros(n, np.int32)])
+    kinds = np.concatenate([np.full(n, ARRIVAL_KIND, np.int32),
+                            np.full(n, DEPARTURE_KIND, np.int32)])
     items = np.concatenate([np.arange(n), np.arange(n)]).astype(np.int32)
     order = np.lexsort((np.arange(2 * n), kinds, times))
-    usage, opened, placements, overflow = _simulate(
-        jnp.asarray(inst.sizes), jnp.asarray(times[order]),
-        jnp.asarray(kinds[order]), jnp.asarray(items[order]),
-        jnp.asarray(pdeps), policy=policy, max_bins=max_bins)
+    return times[order], kinds[order], items[order]
+
+
+def simulate(inst: Instance, policy: str = "first_fit",
+             predicted_durations: Optional[np.ndarray] = None,
+             max_bins: int = 256, auto_grow: bool = True,
+             max_bins_cap: int = MAX_BINS_CAP) -> JaxSimResult:
+    """Replay one instance.  If the slot pool overflows and ``auto_grow`` is
+    set, retries with a doubled ``max_bins`` (up to ``max_bins_cap``) instead
+    of returning garbage - the same escalation ladder the batched sweep
+    runner applies per lane."""
+    assert policy in POLICIES, policy
+    pdeps = inst.departures if predicted_durations is None \
+        else inst.arrivals + predicted_durations
+    times, kinds, items = event_sequence(inst)
+    sizes_j, times_j = jnp.asarray(inst.sizes), jnp.asarray(times)
+    kinds_j, items_j = jnp.asarray(kinds), jnp.asarray(items)
+    pdeps_j = jnp.asarray(pdeps)
+    while True:
+        usage, opened, placements, overflow = _simulate(
+            sizes_j, times_j, kinds_j, items_j, pdeps_j,
+            policy=policy, max_bins=max_bins)
+        if not bool(overflow) or not auto_grow or max_bins >= max_bins_cap:
+            break
+        max_bins = grow_max_bins(max_bins, max_bins_cap)
     return JaxSimResult(float(usage), int(opened),
-                        np.asarray(placements), bool(overflow))
+                        np.asarray(placements), bool(overflow), max_bins)

@@ -9,6 +9,8 @@ Pdur = Rdur/delta or delta*Rdur.  eps=1 is perfect prediction.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import numpy as np
 
 from .types import Instance
@@ -27,3 +29,21 @@ def uniform_predictions(inst: Instance, eps: float, seed: int = 0) -> np.ndarray
     delta = rng.uniform(1.0, eps, inst.n_items)
     over = rng.random(inst.n_items) < 0.5
     return np.where(over, inst.durations * delta, inst.durations / delta)
+
+
+def lognormal_predictions_batch(inst: Instance, sigma: float,
+                                seeds: Sequence[int]) -> np.ndarray:
+    """(n_seeds, n_items) predicted durations for the batched sweep runner.
+
+    Row ``s`` is ``lognormal_predictions(inst, sigma, seed=seeds[s])``, so
+    sweep results stay stable when the seed list grows."""
+    return np.stack([lognormal_predictions(inst, sigma, seed=s)
+                     for s in seeds])
+
+
+def uniform_predictions_batch(inst: Instance, eps: float,
+                              seeds: Sequence[int]) -> np.ndarray:
+    """(n_seeds, n_items) stack of ``uniform_predictions``, one seed per
+    row (same seed-stability guarantee as the log-normal variant)."""
+    return np.stack([uniform_predictions(inst, eps, seed=s)
+                     for s in seeds])

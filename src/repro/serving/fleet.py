@@ -91,8 +91,11 @@ def _baseline(reqs, policy: str, caps: ReplicaCapacity, tps: float) -> Dict:
                 del load[rep]
         reps = sorted(active)
         placed = None
-        if policy == "pack_all" and reps:
-            placed = reps[0] if fits(reps[0], r) else None
+        if policy == "pack_all":
+            # single unbounded replica: capacity intentionally not enforced,
+            # so replica-seconds degenerate to the activity span (the
+            # lower-bound-ish reference the DVBP policies are judged against)
+            placed = reps[0] if reps else None
         elif reps:
             for k in range(len(reps)):
                 cand = reps[(rr + k) % len(reps)]

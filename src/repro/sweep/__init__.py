@@ -1,0 +1,16 @@
+"""Batched experiment sweeps: evaluate a whole DVBP grid on-device.
+
+Public API:
+    pack_instances / pad_predictions / InstanceBatch   (batching)
+    run_batch / run_grid / BatchRunResult              (vmapped runner)
+    SuiteSpec / PredModel / SweepSpec / run_sweep /
+    summarize_sweep / result_key                       (declarative grids)
+    SweepStore                                         (incremental JSON store)
+
+CLI: ``python -m repro.sweep --help`` (see sweep/README.md).
+"""
+from .batching import InstanceBatch, pack_instances, pad_predictions  # noqa: F401
+from .runner import BatchRunResult, run_batch, run_grid  # noqa: F401
+from .grid import (PredModel, SuiteSpec, SweepSpec, result_key,  # noqa: F401
+                   run_sweep, summarize_sweep)
+from .store import SweepStore  # noqa: F401

@@ -1,0 +1,128 @@
+"""Pad a list of DVBP ``Instance``s into one batched event tensor.
+
+Padding convention (consumed by ``repro.sweep.runner`` and documented for
+anyone adding lanes):
+
+  * **Items** are padded to ``n_max = max(n_items)``.  Padded item rows have
+    zero size vectors and pdep 0; they never appear in the event stream, so
+    they are never placed (their output placement stays ``-1``).
+  * **Dimensions** are zero-padded to ``d_max = max(d)``.  ``dmask[b, k]`` is
+    1.0 for real dimensions of lane ``b`` and 0.0 for padding.  Zero-size
+    padded dims are trivially feasible; the replay's best-fit scores mask
+    them out via ``dmask`` so residual norms are computed over real dims only.
+  * **Events** are padded to ``2 n_max`` *at the end* with
+    ``kind == jaxsim.PAD_KIND`` (-1), item index 0, and a time strictly after
+    the lane's last real event.  Pad events are no-ops in the scan (the carry
+    passes through), so a short lane finishes its replay and then idles.
+
+Each lane's real event prefix is produced by ``jaxsim.event_sequence`` -
+identical ordering semantics (departures before arrivals at equal times) to
+the single-instance ``simulate()`` path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..core.jaxsim import PAD_KIND, event_sequence
+from ..core.types import Instance
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceBatch:
+    """Struct-of-padded-arrays view of ``B`` instances (see module doc)."""
+
+    sizes: np.ndarray     # (B, n_max, d_max) float32-safe
+    arrivals: np.ndarray  # (B, n_max)  padded with 0
+    pdeps: np.ndarray     # (B, n_max)  real departures; padded with 0
+    times: np.ndarray     # (B, 2 n_max)
+    kinds: np.ndarray     # (B, 2 n_max) int32: 1 arrival / 0 departure / -1 pad
+    items: np.ndarray     # (B, 2 n_max) int32
+    dmask: np.ndarray     # (B, d_max) float: 1.0 real dim, 0.0 padding
+    n_items: np.ndarray   # (B,) int32 real item counts
+    names: tuple          # (B,) instance names
+
+    @property
+    def B(self) -> int:
+        return self.sizes.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self.sizes.shape[1]
+
+    @property
+    def d_max(self) -> int:
+        return self.sizes.shape[2]
+
+
+def pack_instances(instances: Sequence[Instance]) -> InstanceBatch:
+    assert len(instances) > 0, "cannot pack an empty instance list"
+    B = len(instances)
+    n_max = max(i.n_items for i in instances)
+    d_max = max(i.d for i in instances)
+
+    sizes = np.zeros((B, n_max, d_max))
+    arrivals = np.zeros((B, n_max))
+    pdeps = np.zeros((B, n_max))
+    times = np.zeros((B, 2 * n_max))
+    kinds = np.full((B, 2 * n_max), PAD_KIND, np.int32)
+    items = np.zeros((B, 2 * n_max), np.int32)
+    dmask = np.zeros((B, d_max))
+    n_items = np.zeros(B, np.int32)
+
+    for b, inst in enumerate(instances):
+        n, d = inst.n_items, inst.d
+        sizes[b, :n, :d] = inst.sizes
+        arrivals[b, :n] = inst.arrivals
+        pdeps[b, :n] = inst.departures
+        t, k, j = event_sequence(inst)
+        times[b, :2 * n] = t
+        kinds[b, :2 * n] = k
+        items[b, :2 * n] = j
+        # pad events idle *after* the lane's replay; finite time avoids
+        # inf arithmetic in the (discarded) no-op branches
+        times[b, 2 * n:] = (t[-1] if n else 0.0) + 1.0
+        dmask[b, :d] = 1.0
+        n_items[b] = n
+    return InstanceBatch(sizes, arrivals, pdeps, times, kinds, items, dmask,
+                         n_items, tuple(i.name for i in instances))
+
+
+def pad_predictions(batch: InstanceBatch,
+                    predicted_durations: Sequence[Optional[np.ndarray]]
+                    ) -> np.ndarray:
+    """Stack per-lane predicted-duration arrays into pdeps of shape
+    ``(B, S, n_max)`` (predicted departure = arrival + predicted duration).
+
+    Each element of ``predicted_durations`` is, for its lane, either
+      * ``None`` - clairvoyant/non-clairvoyant: real departures, or
+      * ``(n_b,)`` - one prediction set, or
+      * ``(S, n_b)`` - one prediction set per seed.
+    All lanes must agree on ``S`` (None counts as any S: it broadcasts).
+    """
+    assert len(predicted_durations) == batch.B
+    S = 1
+    for p in predicted_durations:
+        if p is not None and np.asarray(p).ndim == 2:
+            S = max(S, np.asarray(p).shape[0])
+    out = np.zeros((batch.B, S, batch.n_max))
+    for b, p in enumerate(predicted_durations):
+        n = int(batch.n_items[b])
+        if p is None:
+            out[b, :, :n] = batch.pdeps[b, :n]
+            continue
+        p = np.asarray(p)
+        if p.ndim == 1:
+            p = p[None, :]
+        assert p.shape[0] in (1, S), \
+            f"lane {b}: {p.shape[0]} seed rows, batch has {S}"
+        assert p.shape[1] == n, f"lane {b}: {p.shape[1]} != {n} items"
+        out[b, :, :n] = batch.arrivals[b, None, :n] + p
+    return out
+
+
+def instances_pdeps(batch: InstanceBatch) -> np.ndarray:
+    """Default (B, 1, n_max) pdeps tensor: the real departures."""
+    return batch.pdeps[:, None, :]

@@ -1,0 +1,210 @@
+"""Declarative experiment grids: suites x policies x prediction models x
+seeds, expanded to batched runs and aggregated into performance ratios.
+
+A ``SweepSpec`` is a frozen, canonically-hashable description of the whole
+grid (the paper's empirical section is one such grid: {Azure-like +
+Huawei-like suites} x {policies} x {prediction-noise levels} x {seeds}).
+``run_sweep`` expands it, drives ``runner.run_batch`` once per
+(suite, policy, prediction model), divides per-instance usage by the Eq.(1)
+lower bound, and - when given a ``SweepStore`` - skips any (suite, policy,
+prediction) group whose records are already persisted, so repeated sweeps
+are incremental.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import (BoxStats, lognormal_predictions_batch, lower_bound,
+                    uniform_predictions_batch)
+from ..core.jaxsim import MAX_BINS_CAP, POLICIES
+from ..core.types import Instance
+from ..data import make_azure_like_suite, make_huawei_like_suite
+from .batching import pack_instances, pad_predictions
+
+PRED_KINDS = ("none", "clairvoyant", "lognormal", "uniform")
+
+
+@dataclasses.dataclass(frozen=True)
+class SuiteSpec:
+    """One instance family: which generator, how many instances, how big."""
+
+    family: str = "azure"          # "azure" | "huawei"
+    n_instances: int = 6
+    n_items: int = 500
+    seed: int = 2026
+
+    def build(self) -> List[Instance]:
+        if self.family == "azure":
+            return make_azure_like_suite(self.n_instances, self.n_items,
+                                         self.seed)
+        if self.family == "huawei":
+            return make_huawei_like_suite(self.n_instances, self.n_items,
+                                          self.seed)
+        raise ValueError(f"unknown suite family {self.family!r}")
+
+    def label(self) -> str:
+        return f"{self.family}-{self.n_instances}x{self.n_items}-s{self.seed}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PredModel:
+    """Prediction setting for the grid.
+
+    kind:
+      * "none"        - non-clairvoyant replay (score-based policies ignore
+                        pdeps; prediction-requiring ones see real departures)
+      * "clairvoyant" - perfect predictions (pdur == real duration)
+      * "lognormal"   - delta ~ LogNormal(0, param)    (param == sigma)
+      * "uniform"     - delta ~ U[1, param], fair coin (param == eps)
+    """
+
+    kind: str = "clairvoyant"
+    param: float = 0.0
+
+    def __post_init__(self):
+        assert self.kind in PRED_KINDS, self.kind
+
+    @property
+    def noisy(self) -> bool:
+        return self.kind in ("lognormal", "uniform")
+
+    def label(self) -> str:
+        if self.kind == "lognormal":
+            return f"lognormal{self.param:g}"
+        if self.kind == "uniform":
+            return f"uniform{self.param:g}"
+        return self.kind
+
+    def durations(self, inst: Instance,
+                  seeds: Sequence[int]) -> Optional[np.ndarray]:
+        """(n_seeds, n_items) predicted durations, or None for the exact
+        (real departures) settings."""
+        if self.kind == "lognormal":
+            return lognormal_predictions_batch(inst, self.param, seeds)
+        if self.kind == "uniform":
+            return uniform_predictions_batch(inst, self.param, seeds)
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """The full declarative grid."""
+
+    suites: Tuple[SuiteSpec, ...] = (SuiteSpec(),)
+    policies: Tuple[str, ...] = POLICIES
+    predictions: Tuple[PredModel, ...] = (PredModel("clairvoyant"),)
+    seeds: Tuple[int, ...] = (0,)        # used by noisy prediction models
+    max_bins: int = 64                   # initial slot pool per lane
+    max_bins_cap: int = 8192             # escalation ladder ceiling
+
+    def __post_init__(self):
+        for p in self.policies:
+            assert p in POLICIES, f"{p!r} is not a jaxsim policy"
+        assert self.max_bins_cap <= MAX_BINS_CAP
+
+    def canonical(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def spec_hash(self) -> str:
+        blob = json.dumps(self.canonical(), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def suites_hash(self) -> str:
+        """Hash of the *instances* only.  Results are keyed per
+        (instance, policy, pred, seed) and do not depend on the rest of the
+        spec (max_bins only sets the escalation start), so specs sharing
+        suites share a store file - extending policies/predictions/seeds
+        reuses every cached group."""
+        blob = json.dumps([dataclasses.asdict(s) for s in self.suites],
+                          sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def result_key(suite: SuiteSpec, instance_name: str, policy: str,
+               pred: PredModel, seed: int) -> str:
+    return (f"{suite.label()}/{instance_name}/{policy}/"
+            f"{pred.label()}/seed{seed}")
+
+
+def _group_cached(records: Dict[str, Dict], suite: SuiteSpec, policy: str,
+                  pred: PredModel, seeds: Sequence[int]) -> bool:
+    """True when every (instance, seed) record of the group is present -
+    checked from record fields so cached suites need not be rebuilt."""
+    have = sum(1 for r in records.values()
+               if r["suite"] == suite.label() and r["policy"] == policy
+               and r["pred"] == pred.label() and r["seed"] in seeds)
+    return have >= suite.n_instances * len(seeds)
+
+
+def run_sweep(spec: SweepSpec, store=None, force: bool = False,
+              progress=None) -> Dict[str, Dict]:
+    """Expand and run the grid; returns {result_key: record}.
+
+    record schema (also persisted by SweepStore, see sweep/README.md):
+      usage_time, lower_bound, ratio, n_bins_opened, overflowed, max_bins,
+      suite, instance, policy, pred, seed
+    """
+    say = progress or (lambda *_: None)
+    from .runner import run_batch   # local import keeps grid importable fast
+
+    records: Dict[str, Dict] = {}
+    if store is not None and not force:
+        records.update(store.load(spec))
+
+    for suite in spec.suites:
+        insts = lbs = batch = None   # built lazily: cached suites stay free
+        for pred in spec.predictions:
+            seeds = tuple(spec.seeds) if pred.noisy else (spec.seeds[0],)
+            todo = [p for p in spec.policies
+                    if not _group_cached(records, suite, p, pred, seeds)]
+            for p in spec.policies:
+                if p not in todo:
+                    say(f"skip {suite.label()}/{p}/{pred.label()} (cached)")
+            if not todo:
+                continue
+            if insts is None:
+                insts = suite.build()
+                lbs = [lower_bound(i) for i in insts]
+                batch = pack_instances(insts)
+            pdeps = pad_predictions(
+                batch, [pred.durations(i, seeds) for i in insts])
+            for policy in todo:
+                say(f"run  {suite.label()}/{policy}/{pred.label()} "
+                    f"B={batch.B} S={len(seeds)}")
+                res = run_batch(batch, policy, pdeps, spec.max_bins,
+                                spec.max_bins_cap)
+                for bi, inst in enumerate(insts):
+                    for si, seed in enumerate(seeds):
+                        records[result_key(suite, inst.name, policy, pred,
+                                           seed)] = {
+                            "suite": suite.label(),
+                            "instance": inst.name,
+                            "policy": policy,
+                            "pred": pred.label(),
+                            "seed": int(seed),
+                            "usage_time": float(res.usage_time[bi, si]),
+                            "lower_bound": float(lbs[bi]),
+                            "ratio": float(res.usage_time[bi, si] / lbs[bi])
+                            if lbs[bi] > 0 else float("inf"),
+                            "n_bins_opened": int(res.n_bins_opened[bi, si]),
+                            "overflowed": bool(res.overflowed[bi, si]),
+                            "max_bins": int(res.max_bins[bi]),
+                        }
+                if store is not None:
+                    store.save(spec, records)
+    return records
+
+
+def summarize_sweep(records: Dict[str, Dict]) -> Dict[Tuple[str, str],
+                                                      BoxStats]:
+    """(policy, pred label) -> BoxStats over per-(instance, seed) ratios."""
+    groups: Dict[Tuple[str, str], List[float]] = {}
+    for rec in records.values():
+        groups.setdefault((rec["policy"], rec["pred"]), []).append(
+            rec["ratio"])
+    return {k: BoxStats.from_ratios(v) for k, v in sorted(groups.items())}

@@ -1,0 +1,64 @@
+"""Persist sweep results as JSON keyed by the spec's *suites* hash.
+
+One file per instance family set under the store root (default
+``experiments/sweeps/``), named ``sweep_<suites_hash>.json``:
+
+    {
+      "schema": 1,
+      "suites_hash": "<16 hex chars>",
+      "spec": { ...canonical spec of the last run that wrote the file... },
+      "results": { "<result_key>": { ...record... }, ... }
+    }
+
+Results are keyed per (suite, instance, policy, prediction model, seed) and
+depend only on the suites, so specs that share suites share a file: an
+interrupted sweep resumes, and an *extended* sweep (more policies,
+prediction models, or seeds over the same suites) computes only the missing
+groups.  ``run_sweep`` loads before running and saves after every completed
+(suite, policy, prediction) group.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict
+
+from .grid import SweepSpec
+
+SCHEMA_VERSION = 1
+
+
+class SweepStore:
+    def __init__(self, root: str = "experiments/sweeps"):
+        self.root = root
+
+    def path(self, spec: SweepSpec) -> str:
+        return os.path.join(self.root, f"sweep_{spec.suites_hash()}.json")
+
+    def load(self, spec: SweepSpec) -> Dict[str, Dict]:
+        path = self.path(spec)
+        if not os.path.exists(path):
+            return {}
+        with open(path) as f:
+            blob = json.load(f)
+        if blob.get("schema") != SCHEMA_VERSION or \
+                blob.get("suites_hash") != spec.suites_hash():
+            return {}
+        return blob.get("results", {})
+
+    def save(self, spec: SweepSpec, results: Dict[str, Dict]) -> str:
+        path = self.path(spec)
+        os.makedirs(self.root, exist_ok=True)
+        blob = {"schema": SCHEMA_VERSION, "suites_hash": spec.suites_hash(),
+                "spec": spec.canonical(), "results": results}
+        # atomic replace so an interrupted sweep never corrupts the file
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path

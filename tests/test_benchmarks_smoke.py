@@ -1,0 +1,36 @@
+"""Smoke test: ``python -m benchmarks.run --fast`` must run end-to-end and
+emit the machine-readable BENCH JSON with the sweep perf rows (the perf
+trajectory tracked across PRs)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_benchmarks_fast_mode_emits_json(tmp_path):
+    out = tmp_path / "bench.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--fast",
+         "--json", str(out)],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    blob = json.loads(out.read_text())
+    rows = {r["name"]: r for r in blob["rows"]}
+    assert rows, "no benchmark rows emitted"
+    # figure rows (paper metric = mean performance ratio >= 1)
+    fig = [r for n, r in rows.items() if n.startswith("fig")]
+    assert fig and all(r["derived"] >= 0.99 for r in fig)
+    # sweep perf rows: loop vs batched grid + speedup
+    sweep = [n for n in rows if n.startswith("perf/sweep_")]
+    assert any("sweep_loop" in n for n in sweep)
+    assert any("sweep_batched" in n for n in sweep)
+    speedup = [r for n, r in rows.items() if "sweep_speedup" in n]
+    assert speedup and speedup[0]["derived"] > 0

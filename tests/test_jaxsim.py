@@ -44,5 +44,24 @@ def test_close_on_general_instance(policy):
 
 def test_overflow_flag():
     inst = quantized_instance(n=100)
-    j = simulate(inst, "first_fit", max_bins=2)
+    j = simulate(inst, "first_fit", max_bins=2, auto_grow=False)
     assert j.overflowed
+    assert j.max_bins == 2
+
+
+def test_overflow_auto_grow():
+    """simulate() must escalate max_bins instead of returning garbage."""
+    inst = quantized_instance(n=200)
+    r = run(inst, _alg("first_fit"))
+    j = simulate(inst, "first_fit", max_bins=1)   # guaranteed overflow
+    assert not j.overflowed
+    assert j.max_bins > 1                         # escalation happened
+    assert j.n_bins_opened == r.n_bins_opened
+    assert j.usage_time == pytest.approx(r.usage_time, abs=1e-3)
+
+
+def test_overflow_cap_respected():
+    inst = quantized_instance(n=100)
+    j = simulate(inst, "first_fit", max_bins=1, max_bins_cap=2)
+    assert j.overflowed
+    assert j.max_bins == 2

@@ -1,0 +1,67 @@
+"""Prediction-error models: batch variants' shapes, seed-stability, and the
+paper's statistical properties (log-normal median ratio == 1; sigma=0 /
+eps=1 are exact)."""
+import numpy as np
+import pytest
+
+from repro.core import (Instance, lognormal_predictions,
+                        lognormal_predictions_batch, uniform_predictions,
+                        uniform_predictions_batch)
+
+
+@pytest.fixture(scope="module")
+def inst():
+    rng = np.random.default_rng(3)
+    n = 4000
+    arr = np.sort(rng.uniform(0, 1e5, n))
+    dur = rng.uniform(10, 5000, n)
+    return Instance(rng.uniform(0.01, 0.5, (n, 4)), arr, arr + dur, "pred")
+
+
+def test_batch_shapes(inst):
+    assert lognormal_predictions_batch(inst, 1.0, range(3)).shape == \
+        (3, inst.n_items)
+    assert uniform_predictions_batch(inst, 4.0, range(5)).shape == \
+        (5, inst.n_items)
+
+
+def test_batch_rows_match_scalar_seed_for_seed(inst):
+    seeds = (0, 7, 42)
+    ln = lognormal_predictions_batch(inst, 1.5, seeds)
+    un = uniform_predictions_batch(inst, 16.0, seeds)
+    for i, s in enumerate(seeds):
+        np.testing.assert_array_equal(
+            ln[i], lognormal_predictions(inst, 1.5, seed=s))
+        np.testing.assert_array_equal(
+            un[i], uniform_predictions(inst, 16.0, seed=s))
+
+
+def test_sigma_zero_is_exact(inst):
+    batch = lognormal_predictions_batch(inst, 0.0, (0, 1))
+    np.testing.assert_array_equal(batch[0], inst.durations)
+    np.testing.assert_array_equal(batch[1], inst.durations)
+
+
+def test_eps_one_is_exact(inst):
+    batch = uniform_predictions_batch(inst, 1.0, (0, 1))
+    np.testing.assert_allclose(batch, np.broadcast_to(
+        inst.durations, batch.shape), rtol=1e-12)
+
+
+def test_lognormal_median_ratio_is_one(inst):
+    """delta ~ LogNormal(0, sigma) has median 1: half the predictions
+    over-estimate, half under-estimate, for every sigma."""
+    for sigma in (0.5, 1.0, 2.0):
+        batch = lognormal_predictions_batch(inst, sigma, range(4))
+        ratio = batch / inst.durations[None, :]
+        assert np.median(ratio) == pytest.approx(1.0, abs=0.05)
+        assert (ratio > 0).all()
+
+
+def test_uniform_ratio_bounds_and_balance(inst):
+    eps = 16.0
+    batch = uniform_predictions_batch(inst, eps, range(4))
+    ratio = batch / inst.durations[None, :]
+    assert (ratio >= 1 / eps - 1e-12).all() and (ratio <= eps + 1e-12).all()
+    over = (ratio > 1.0).mean()          # fair coin for over/under
+    assert 0.45 < over < 0.55

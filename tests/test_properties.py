@@ -8,6 +8,8 @@ algorithm on randomized instances.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ANY_FIT, EPS, Instance, get_algorithm, lower_bound,

@@ -88,6 +88,49 @@ def test_fleet_dvbp_beats_round_robin():
         "DVBP placement should not lose to round robin"
 
 
+def test_pack_all_beats_round_robin():
+    """pack_all (single unbounded replica) is the lower-bound-ish baseline:
+    it can never pay more replica-seconds than spraying round robin."""
+    reqs = synth_requests(800, seed=11)
+    pa = simulate_fleet(reqs, "pack_all")
+    rr = simulate_fleet(reqs, "round_robin")
+    assert pa["replica_seconds"] <= rr["replica_seconds"]
+    assert pa["peak_replicas"] <= rr["peak_replicas"]
+
+
+@pytest.mark.parametrize("policy", ["first_fit", "best_fit", "greedy",
+                                    "nrt_prioritized"])
+def test_dvbp_policies_respect_replica_capacity(policy):
+    """After every placement, no open replica may exceed its capacity
+    vector in any dimension (checked externally, not just via the BinPool
+    assertion)."""
+    caps = ReplicaCapacity(slots=4, kv_tokens=8192, prefill_budget=8192)
+    sched = DVBPScheduler(policy, caps)
+    rng = np.random.default_rng(7)
+    live = []
+    t = 0.0
+    for rid in range(300):
+        t += float(rng.exponential(0.2))
+        while live and live[0][0] <= t:
+            ft, r = live.pop(0)
+            sched.finish(r, ft)
+        req = Request(rid, t, int(rng.integers(16, 512)),
+                      int(rng.integers(8, 1024)),
+                      predicted_decode_len=int(rng.integers(8, 1024)))
+        sched.place(req, t)
+        open_bins = list(sched.pool._open_list)
+        assert open_bins, "placement must leave at least one open replica"
+        assert np.all(sched.pool.used[open_bins] <= 1.0 + 1e-9), \
+            f"{policy} violated replica capacity"
+        live.append((t + req.decode_len / 50.0, rid))
+        live.sort()
+    while live:
+        ft, r = live.pop(0)
+        sched.finish(r, ft)
+    assert not sched.pool._open_list
+    assert sched.stats.replica_seconds > 0
+
+
 def test_fleet_objective_accounting():
     # one request -> exactly its service time of replica-seconds
     reqs = [Request(0, 0.0, 64, 500)]

@@ -1,0 +1,150 @@
+"""repro.sweep (batched vmapped replay) vs the Python oracle engine.
+
+The parity matrix: every jaxsim policy x three prediction settings
+(non-clairvoyant, clairvoyant, noisy) x six mixed-size instances packed into
+one padded batch (varied n -> heavily padded lanes; varied d -> the dmask
+path).  Instances are fp32-exact (sizes on a 1/64 grid, integer times,
+power-of-two prediction noise) so the batched replay must match the f64
+oracle decision-for-decision.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Instance, get_algorithm, run
+from repro.core.jaxsim import POLICIES
+from repro.sweep import (PredModel, SuiteSpec, SweepSpec, SweepStore,
+                         pack_instances, pad_predictions, run_batch,
+                         run_sweep)
+
+SETTINGS = ("nonclairvoyant", "clairvoyant", "noisy0", "noisy1")
+
+
+def quantized_instance(seed, n, d):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 24, (n, d)) / 64.0
+    arr = np.sort(rng.integers(0, 50000, n)).astype(float)
+    dur = rng.integers(10, 5000, n).astype(float)
+    return Instance(sizes, arr, arr + dur,
+                    f"q{seed}").sorted_by_arrival()
+
+
+def pow2_noise(inst, seed):
+    """fp32-exact 'noisy predictions': power-of-two duration multipliers."""
+    rng = np.random.default_rng(seed)
+    delta = rng.choice([0.25, 0.5, 1.0, 2.0, 4.0], inst.n_items)
+    return inst.durations * delta
+
+
+@pytest.fixture(scope="module")
+def mixed():
+    """6 instances with mixed item counts AND mixed dimensionality."""
+    shapes = [(1, 120, 3), (2, 300, 4), (3, 600, 5), (4, 50, 4),
+              (5, 450, 3), (6, 220, 5)]
+    insts = [quantized_instance(*s) for s in shapes]
+    batch = pack_instances(insts)
+    # per-lane (4, n) predicted durations, one row per setting: rows 0/1 are
+    # the real durations (non-clairvoyant / clairvoyant replay both see real
+    # departures on-device), rows 2/3 are two seeds of exact pow2 noise
+    preds = [np.stack([i.durations, i.durations,
+                       pow2_noise(i, 100), pow2_noise(i, 101)])
+             for i in insts]
+    return insts, batch, preds
+
+
+def _alg(pol):
+    if pol.startswith("best_fit"):
+        return get_algorithm("best_fit", norm=pol.split("_")[-1])
+    return get_algorithm(pol)
+
+
+def _oracle_pdur(inst, pred_rows, setting):
+    if setting == "nonclairvoyant":
+        return None                      # engine: pdep = real departures
+    if setting == "clairvoyant":
+        return inst.durations
+    return pred_rows[int(setting[-1]) + 2]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_batched_matches_oracle(policy, mixed):
+    insts, batch, preds = mixed
+    pdeps = pad_predictions(batch, preds)
+    res = run_batch(batch, policy, pdeps, max_bins=64)
+    assert not res.overflowed.any()
+    for i, inst in enumerate(insts):
+        for si, setting in enumerate(SETTINGS):
+            r = run(inst, _alg(policy),
+                    predicted_durations=_oracle_pdur(inst, preds[i],
+                                                     setting))
+            assert res.n_bins_opened[i, si] == r.n_bins_opened, \
+                (policy, inst.name, setting)
+            assert res.usage_time[i, si] == pytest.approx(
+                r.usage_time, abs=1e-3), (policy, inst.name, setting)
+
+
+def test_padded_lane_equals_solo_run(mixed):
+    """A short lane padded into a big batch must equal its solo replay."""
+    insts, batch, _ = mixed
+    idx = 3                              # n=50, heavily padded (n_max=600)
+    solo = run_batch(pack_instances([insts[idx]]), "best_fit_linf",
+                     max_bins=64)
+    res = run_batch(batch, "best_fit_linf", max_bins=64)
+    assert res.usage_time[idx, 0] == solo.usage_time[0, 0]
+    assert res.n_bins_opened[idx, 0] == solo.n_bins_opened[0, 0]
+
+
+def test_lanewise_overflow_escalation(mixed):
+    """Starting from a tiny slot pool, overflowed lanes are re-run with a
+    doubled pool until they fit - results still match the oracle."""
+    insts, batch, _ = mixed
+    res = run_batch(batch, "first_fit", max_bins=2)
+    assert not res.overflowed.any()
+    assert (res.max_bins > 2).any()      # escalation actually happened
+    for i, inst in enumerate(insts):
+        r = run(inst, _alg("first_fit"))
+        assert res.usage_time[i, 0] == pytest.approx(r.usage_time, abs=1e-3)
+
+
+def test_escalation_cap(mixed):
+    insts, batch, _ = mixed
+    res = run_batch(batch, "first_fit", max_bins=1, max_bins_cap=2)
+    assert res.overflowed.any()          # cap too small: flagged, not hidden
+    assert res.max_bins.max() == 2
+
+
+def test_run_sweep_incremental(tmp_path):
+    spec = SweepSpec(suites=(SuiteSpec("azure", 2, 120, 5),),
+                     policies=("first_fit", "greedy"),
+                     predictions=(PredModel("clairvoyant"),
+                                  PredModel("lognormal", 1.0)),
+                     seeds=(0, 1), max_bins=32)
+    store = SweepStore(str(tmp_path))
+    log1, log2 = [], []
+    rec1 = run_sweep(spec, store=store, progress=log1.append)
+    # 2 policies x (clairvoyant 1 seed + lognormal 2 seeds) x 2 instances
+    assert len(rec1) == 2 * 3 * 2
+    assert all(r["ratio"] >= 1.0 - 1e-6 for r in rec1.values())
+    assert not any(r["overflowed"] for r in rec1.values())
+    rec2 = run_sweep(spec, store=store, progress=log2.append)
+    assert rec2 == rec1
+    assert all(m.startswith("skip") for m in log2)       # fully cached
+    assert store.load(spec) == rec1
+    # extending the grid over the same suites reuses every cached group
+    wider = SweepSpec(suites=spec.suites,
+                      policies=("first_fit", "greedy", "mru"),
+                      predictions=spec.predictions, seeds=spec.seeds,
+                      max_bins=32)
+    assert wider.suites_hash() == spec.suites_hash()
+    log3 = []
+    rec3 = run_sweep(wider, store=store, progress=log3.append)
+    ran = [m for m in log3 if m.startswith("run")]
+    assert len(ran) == 2 and all("/mru/" in m for m in ran)
+    assert {k: v for k, v in rec3.items() if "/mru/" not in k} == rec1
+
+
+def test_sweep_spec_hash_is_canonical():
+    a = SweepSpec(policies=("first_fit",))
+    b = SweepSpec(policies=("first_fit",))
+    c = SweepSpec(policies=("greedy",))
+    assert a.spec_hash() == b.spec_hash()
+    assert a.spec_hash() != c.spec_hash()
