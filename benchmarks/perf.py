@@ -54,6 +54,86 @@ def kernels() -> List[str]:
     return rows
 
 
+def fitscore_step(lanes: int = 8, n_slots: int = 4096,
+                  d: int = 5) -> List[str]:
+    """The sweep scan's placement step in isolation: the inline vmapped jnp
+    select vs the fused lane-batched Pallas kernel (interpret mode on CPU,
+    native on TPU).  Derived column: scored slots per microsecond."""
+    from functools import partial
+
+    from repro.core.jaxsim import _select_slot
+    from repro.kernels.fitscore import fitscore_select_batch
+    rng = np.random.default_rng(0)
+    loads = jnp.asarray(rng.random((lanes, n_slots, d)) * 0.5, jnp.float32)
+    counts = jnp.asarray((rng.random((lanes, n_slots)) > 0.3)
+                         .astype(np.int32))
+    alive = counts > 0
+    oseq = jnp.asarray(np.tile(rng.permutation(n_slots), (lanes, 1))
+                       .astype(np.int32))
+    closes = jnp.asarray(rng.random((lanes, n_slots)) * 1e4, jnp.float32)
+    size = jnp.asarray(rng.random((lanes, d)) * 0.3, jnp.float32)
+    pdep = jnp.asarray(rng.random(lanes) * 1e4, jnp.float32)
+    now = jnp.asarray(rng.random(lanes) * 1e3, jnp.float32)
+    dmask = jnp.ones((lanes, d))
+    args = (loads, counts, alive, oseq, oseq, closes, size, pdep, now, dmask)
+    policy = "best_fit_linf"
+
+    jnp_fn = jax.jit(lambda *a: jax.vmap(partial(_select_slot, policy))(*a))
+    t_j = _timeit(lambda: jnp_fn(*args))
+    interpret = jax.default_backend() != "tpu"
+    pal_fn = jax.jit(lambda *a: fitscore_select_batch(
+        *a, policy=policy, interpret=interpret))
+    t_p = _timeit(lambda: pal_fn(*args))
+    per_us = lanes * n_slots / 1e6
+    return [f"perf/fitscore_step_jnp,{t_j*1e6:.0f},{per_us/t_j:.2f}",
+            f"perf/fitscore_step_pallas,{t_p*1e6:.0f},{per_us/t_p:.2f}"]
+
+
+_SHARDED_BENCH = """
+import time
+import jax, numpy as np
+from repro.data import make_azure_like_suite
+from repro.sweep import pack_instances, run_batch
+insts = make_azure_like_suite(n_instances=28, n_items=250, seed=11)
+batch = pack_instances(insts)
+policies = ("first_fit", "best_fit_l2", "greedy", "nrt_prioritized")
+for shard in ("never", "always"):
+    t0 = time.time()
+    usage = sum(float(run_batch(batch, p, max_bins=64, shard=shard)
+                      .usage_time.sum()) for p in policies)
+    print(f"{shard},{time.time() - t0},{usage}")
+"""
+
+
+def sweep_sharded(ndev: int = 4) -> List[str]:
+    """The 28x4 sweep grid with the lane axis sharded over ``ndev`` forced
+    host devices vs the single-device path, in a subprocess (device count is
+    fixed at jax init).  On one physical CPU the shards share cores, so the
+    derived speedup ratio is the honest lower bound; on a real multi-chip
+    host each shard gets its own chip."""
+    import subprocess
+    import sys
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}")
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_BENCH], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-500:])
+    times, usages = {}, {}
+    for line in proc.stdout.strip().splitlines():
+        shard, t, usage = line.split(",")
+        times[shard] = float(t)
+        usages[shard] = float(usage)
+    assert usages["never"] == usages["always"], \
+        f"sharded results diverged: {usages}"
+    n_runs = 28 * 4
+    return [f"perf/sweep_sharded_28x4,{times['always']/n_runs*1e6:.0f},"
+            f"{times['never']/times['always']:.2f}"]
+
+
 def jaxsim_vs_oracle() -> List[str]:
     from repro.core import get_algorithm, run
     from repro.core.jaxsim import simulate

@@ -70,12 +70,17 @@ def main() -> None:
                 emit(line)
     if not args.skip_perf and not args.only:
         from . import perf
+        # sweep_grid runs before the interpret-mode kernel benches: their
+        # emulation programs bloat the in-process XLA state enough to skew
+        # the headline sweep timing (which includes compilation).
         groups = [perf.kernels, perf.jaxsim_vs_oracle, perf.serving_fleet,
-                  perf.sweep_grid, perf.roofline_summary]
+                  perf.sweep_grid, perf.fitscore_step, perf.sweep_sharded,
+                  perf.roofline_summary]
         if args.fast:
             groups = [lambda: perf.sweep_grid(n_instances=6, n_items=120,
                                               policies=("first_fit",
-                                                        "greedy"))]
+                                                        "greedy")),
+                      lambda: perf.fitscore_step(lanes=2, n_slots=512)]
         for group in groups:
             try:
                 for line in group():

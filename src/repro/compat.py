@@ -4,6 +4,14 @@
 replication-check kwarg to ``check_vma``; jax 0.4.x has it under
 ``jax.experimental.shard_map`` with ``check_rep``.  Callers use the new
 spelling and this wrapper translates.
+
+``optimization_barrier`` autodiff: jax 0.4.37 has no differentiation rule
+for ``optimization_barrier_p`` (added upstream in 0.4.38), so every
+remat/microbatch model that wraps layer params in a barrier fails under
+``jax.grad``.  The barrier is the identity for autodiff, so
+``install_optimization_barrier_grad`` registers the upstream JVP/transpose
+rules when they are missing; it runs on import (same pattern as the
+shard_map shim: callers just ``import repro.compat``).
 """
 from __future__ import annotations
 
@@ -18,3 +26,30 @@ except ImportError:
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **{_SHARD_CHECK_KW: check_vma})
+
+
+def install_optimization_barrier_grad() -> bool:
+    """Make ``jax.lax.optimization_barrier`` differentiable (identity rules).
+
+    Returns True when the shim (or an upstream rule) is in place.  No-op on
+    jax versions that already ship the rules.
+    """
+    try:
+        from jax.interpreters import ad
+        from jax._src.lax import lax as _lax_internal
+        prim = _lax_internal.optimization_barrier_p
+    except (ImportError, AttributeError):   # pragma: no cover - future jax
+        return False
+    if prim not in ad.primitive_jvps:
+        def _jvp(primals, tangents):
+            tangents = [ad.instantiate_zeros(t) for t in tangents]
+            return prim.bind(*primals), prim.bind(*tangents)
+        ad.primitive_jvps[prim] = _jvp
+    if prim not in ad.primitive_transposes:
+        def _transpose(cts, *primals):
+            return [ad.instantiate_zeros(ct) for ct in cts]
+        ad.primitive_transposes[prim] = _transpose
+    return True
+
+
+install_optimization_barrier_grad()

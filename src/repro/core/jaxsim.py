@@ -3,8 +3,7 @@
 The CPU oracle (core.engine) walks a heap; on an accelerator the same replay
 becomes a scan over the precomputed event sequence (2n events: departures
 before arrivals at equal times) with a fixed pool of bin slots.  Each step is
-an O(slots x d) vector op - the same feasibility+score math as the
-kernels/fitscore Pallas kernel, which replaces the inline scoring on TPU.
+an O(slots x d) vector op.
 
 Supported policies: the score-based Any Fit family (first_fit, best_fit l1 /
 l2 / linf, mru, greedy, nrt_standard, nrt_prioritized) - exactly the family
@@ -15,9 +14,27 @@ Closed slots are reused; usage time accrues per open episode, so results
 match the paper's semantics exactly (validated against the oracle in
 tests/test_jaxsim.py).
 
-The replay core (``_replay``) is written to be ``jax.vmap``-able so that
-``repro.sweep`` can evaluate a whole padded batch of instances (and a batch
-of prediction arrays per instance) in one fused scan-over-batch:
+Two replay cores share one step semantics:
+
+  * ``_replay`` - one lane, ``jax.vmap``-able, inline jnp scoring
+    (``_select_slot``).  ``repro.sweep`` vmaps it over a padded batch on
+    the "jnp" backend.
+  * ``_replay_batch`` - an explicit lane axis, one scan over the event
+    *index* whose per-step placement decision is a single lane-batched op:
+    the fused ``kernels.fitscore.fitscore_select_batch`` Pallas kernel on
+    the "pallas" / "pallas_interpret" backends (feasibility + policy score
+    + opening-order tie-break + free-slot selection in one VMEM-tiled pass,
+    zero host round-trips per step), or the vmapped ``_select_slot`` on
+    "jnp".
+
+The backend switch (``BACKENDS`` / ``resolve_backend``; "auto" = Pallas on
+TPU, jnp elsewhere, override with REPRO_FITSCORE_BACKEND) feeds
+``simulate`` and ``repro.sweep.runner``.  Kernel and jnp paths are
+bit-identical on fp32-exact instances - the scoring constants and policy
+list are imported from ``kernels.fitscore`` so they cannot drift
+(tests/test_fitscore_select.py).
+
+Batch padding conventions (produced by ``repro.sweep.batching``):
 
   * events with ``kind == PAD_KIND`` are no-ops (the carry passes through
     unchanged), which is how shorter instances ride in a ``(B, 2 n_max)``
@@ -37,12 +54,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.fitscore import (F32_EPS, IBIG, SCORE_BIG, SCORE_NEG,
+                                SELECT_POLICIES, fitscore_select_batch)
 from .types import EPS, Instance
 
-POLICIES = ("first_fit", "best_fit_l1", "best_fit_l2", "best_fit_linf",
-            "mru", "greedy", "nrt_standard", "nrt_prioritized")
-NEG = -1e30
-BIG = 1e30
+# Scoring semantics are shared with the Pallas kernel (kernels/fitscore.py
+# is the single definition site so the two paths cannot drift).
+POLICIES = SELECT_POLICIES
+NEG = SCORE_NEG
+BIG = SCORE_BIG
 
 # Event kinds in the precomputed sequence.
 ARRIVAL_KIND = 1
@@ -51,6 +71,21 @@ PAD_KIND = -1
 
 # Slot-pool escalation schedule shared by simulate() and repro.sweep.runner.
 MAX_BINS_CAP = 65536
+
+# Scoring/selection backends.  "auto" resolves to the Pallas kernel on TPU
+# and the inline jnp path elsewhere; "pallas_interpret" runs the kernel body
+# in interpret mode (the CPU correctness harness).
+BACKENDS = ("auto", "jnp", "pallas", "pallas_interpret")
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve a backend name (or REPRO_FITSCORE_BACKEND / "auto")."""
+    import os
+    backend = backend or os.environ.get("REPRO_FITSCORE_BACKEND", "auto")
+    assert backend in BACKENDS, backend
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
 
 
 def grow_max_bins(max_bins: int, cap: int = MAX_BINS_CAP) -> int:
@@ -65,9 +100,6 @@ class JaxSimResult:
     placements: np.ndarray
     overflowed: bool
     max_bins: int = 0   # slot-pool size that produced this result
-
-
-F32_EPS = 1e-6   # fp32-appropriate capacity tolerance (oracle uses 1e-9/f64)
 
 
 def _score(policy: str, loads, alive, open_seq, access_seq, closes, size,
@@ -110,6 +142,27 @@ def _score(policy: str, loads, alive, open_seq, access_seq, closes, size,
     return jnp.where(feasible, s, BIG)
 
 
+def _select_slot(policy, loads, counts, alive, open_seq, access_seq, closes,
+                 size, pdep, now, dmask):
+    """The fused placement decision, inline-jnp flavor: min score with ties
+    broken by opening order (the oracle iterates open bins in opening order
+    and takes the first), falling back to the smallest closed/virgin slot.
+    Returns (slot, found, no_free) - the contract the Pallas kernel
+    (``kernels.fitscore.fitscore_select_batch``) reproduces bit-for-bit."""
+    n_slots = loads.shape[0]
+    s = _score(policy, loads, alive, open_seq, access_seq, closes, size,
+               pdep, now, dmask)
+    smin = jnp.min(s)
+    tie = s <= smin
+    best = jnp.argmin(jnp.where(tie, open_seq, jnp.int32(IBIG)))
+    found = smin < BIG
+    free = jnp.argmin(jnp.where(counts == 0, jnp.arange(n_slots),
+                                n_slots + 1))
+    no_free = counts[free] != 0
+    b = jnp.where(found, best, free).astype(jnp.int32)
+    return b, found, no_free
+
+
 def _replay(sizes, times, kinds, items, pdeps, dmask, *, policy: str,
             max_bins: int):
     """One instance's event replay; pure function of its array arguments,
@@ -140,19 +193,9 @@ def _replay(sizes, times, kinds, items, pdeps, dmask, *, policy: str,
             jnp.where(closing, NEG, closes[b_dep]))
 
         # ---- arrival branch data
-        s = _score(policy, loads, alive, open_seq, access_seq, closes,
-                   size, pdeps[j], t, dmask)
-        # two-stage selection: min score, ties broken by opening order (the
-        # oracle iterates open bins in opening order and takes the first)
-        smin = jnp.min(s)
-        tie = s <= smin
-        best = jnp.argmin(jnp.where(tie, open_seq, jnp.int32(2 ** 30)))
-        found = smin < BIG
-        # open a fresh slot: smallest index with count==0 (closed/virgin)
-        free = jnp.argmin(jnp.where(counts == 0, jnp.arange(n_slots),
-                                    n_slots + 1))
-        no_free = counts[free] != 0
-        b = jnp.where(found, best, free).astype(jnp.int32)
+        b, found, no_free = _select_slot(policy, loads, counts, alive,
+                                         open_seq, access_seq, closes, size,
+                                         pdeps[j], t, dmask)
         overflow_arr = overflow | (~found & no_free)
         loads_arr = loads.at[b].add(size)
         counts_arr = counts.at[b].add(1)
@@ -193,11 +236,121 @@ def _replay(sizes, times, kinds, items, pdeps, dmask, *, policy: str,
     return carry[8], carry[10], carry[7], carry[11]
 
 
+def _replay_batch(sizes, times, kinds, items, pdeps, dmask, *, policy: str,
+                  max_bins: int, backend: str = "jnp"):
+    """``L`` lanes' event replays in lockstep: one scan over the event
+    *index* whose step processes every lane at once, so the arrival scoring
+    is a single (L, slots, d) op - on TPU the fused
+    ``kernels.fitscore.fitscore_select_batch`` Pallas kernel, with zero host
+    round-trips per step.
+
+    Same argument convention as ``_replay`` with a leading lane axis on
+    every array (``dmask`` may be None); same return tuple with a leading
+    lane axis.  ``backend="jnp"`` selects with the inline vmapped
+    ``_select_slot`` (bit-identical to the vmapped ``_replay`` path);
+    "pallas"/"pallas_interpret" run the kernel natively / in interpret mode.
+    """
+    L, n_max, d = sizes.shape
+    n_slots = max_bins
+    lanes = jnp.arange(L)
+    dmask_full = jnp.ones((L, d)) if dmask is None else dmask
+
+    def step(carry, ev):
+        (loads, counts, alive, open_seq, access_seq, closes, open_time,
+         placements, usage, seq, opened, overflow) = carry
+        t, kind, j = ev                       # (L,) each
+        j = j.astype(jnp.int32)
+        size = jnp.take_along_axis(sizes, j[:, None, None], axis=1)[:, 0]
+        pdep_j = jnp.take_along_axis(pdeps, j[:, None], axis=1)[:, 0]
+        is_arr = kind == ARRIVAL_KIND
+        is_pad = kind == PAD_KIND
+
+        # ---- departure branch data
+        b_dep = jnp.take_along_axis(placements, j[:, None], axis=1)[:, 0]
+        loads_dep = loads.at[lanes, b_dep].add(-size)
+        counts_dep = counts.at[lanes, b_dep].add(-1)
+        closing = counts_dep[lanes, b_dep] == 0
+        usage_dep = usage + jnp.where(closing, t - open_time[lanes, b_dep],
+                                      0.0)
+        alive_dep = alive.at[lanes, b_dep].set(
+            jnp.where(closing, False, alive[lanes, b_dep]))
+        loads_dep = loads_dep.at[lanes, b_dep].set(
+            jnp.where(closing[:, None], jnp.zeros((L, d)),
+                      loads_dep[lanes, b_dep]))
+        closes_dep = closes.at[lanes, b_dep].set(
+            jnp.where(closing, NEG, closes[lanes, b_dep]))
+
+        # ---- arrival branch data
+        if backend == "jnp":
+            b, found, no_free = jax.vmap(partial(_select_slot, policy))(
+                loads, counts, alive, open_seq, access_seq, closes, size,
+                pdep_j, t, dmask_full)
+        else:
+            b, found, no_free = fitscore_select_batch(
+                loads, counts, alive, open_seq, access_seq, closes, size,
+                pdep_j, t, dmask_full, policy=policy,
+                interpret=(backend == "pallas_interpret"))
+        b = b.astype(jnp.int32)
+        overflow_arr = overflow | (~found & no_free)
+        loads_arr = loads.at[lanes, b].add(size)
+        counts_arr = counts.at[lanes, b].add(1)
+        alive_arr = alive.at[lanes, b].set(True)
+        open_seq_arr = open_seq.at[lanes, b].set(
+            jnp.where(found, open_seq[lanes, b], seq))
+        open_time_arr = open_time.at[lanes, b].set(
+            jnp.where(found, open_time[lanes, b], t))
+        access_arr = access_seq.at[lanes, b].set(seq)
+        closes_arr = closes.at[lanes, b].set(
+            jnp.maximum(jnp.where(found, closes[lanes, b], NEG),
+                        jnp.maximum(pdep_j, t)))
+        placements_arr = placements.at[lanes, j].set(b)
+        opened_arr = opened + jnp.where(found, 0, 1)
+
+        def pick(cond, a_val, d_val):
+            return jax.tree.map(
+                lambda x, y: jnp.where(
+                    cond.reshape(cond.shape + (1,) * (x.ndim - 1)), x, y),
+                a_val, d_val)
+        new = pick(
+            is_arr,
+            (loads_arr, counts_arr, alive_arr, open_seq_arr, access_arr,
+             closes_arr, open_time_arr, placements_arr, usage, seq + 1,
+             opened_arr, overflow_arr),
+            (loads_dep, counts_dep, alive_dep, open_seq, access_seq,
+             closes_dep, open_time, placements, usage_dep, seq, opened,
+             overflow))
+        # padded events are no-ops: the carry passes through untouched
+        carry = pick(is_pad, carry, new)
+        return carry, None
+
+    init = (jnp.zeros((L, n_slots, d)), jnp.zeros((L, n_slots), jnp.int32),
+            jnp.zeros((L, n_slots), bool),
+            jnp.zeros((L, n_slots), jnp.int32),
+            jnp.full((L, n_slots), -1, jnp.int32),
+            jnp.full((L, n_slots), NEG), jnp.zeros((L, n_slots)),
+            jnp.full((L, n_max), -1, jnp.int32), jnp.zeros(L),
+            jnp.zeros(L, jnp.int32), jnp.zeros(L, jnp.int32),
+            jnp.zeros(L, bool))
+    xs = tuple(jnp.swapaxes(a, 0, 1) for a in (times, kinds, items))
+    carry, _ = jax.lax.scan(step, init, xs)
+    return carry[8], carry[10], carry[7], carry[11]
+
+
 @partial(jax.jit, static_argnames=("policy", "max_bins"))
 def _simulate(sizes, times, kinds, items, pdeps, *, policy: str,
               max_bins: int):
     return _replay(sizes, times, kinds, items, pdeps, None,
                    policy=policy, max_bins=max_bins)
+
+
+@partial(jax.jit, static_argnames=("policy", "max_bins", "backend"))
+def _simulate_kernel(sizes, times, kinds, items, pdeps, *, policy: str,
+                     max_bins: int, backend: str):
+    u, o, p, ov = _replay_batch(sizes[None], times[None], kinds[None],
+                                items[None], pdeps[None], None,
+                                policy=policy, max_bins=max_bins,
+                                backend=backend)
+    return u[0], o[0], p[0], ov[0]
 
 
 def event_sequence(inst: Instance):
@@ -216,12 +369,16 @@ def event_sequence(inst: Instance):
 def simulate(inst: Instance, policy: str = "first_fit",
              predicted_durations: Optional[np.ndarray] = None,
              max_bins: int = 256, auto_grow: bool = True,
-             max_bins_cap: int = MAX_BINS_CAP) -> JaxSimResult:
+             max_bins_cap: int = MAX_BINS_CAP,
+             backend: Optional[str] = None) -> JaxSimResult:
     """Replay one instance.  If the slot pool overflows and ``auto_grow`` is
     set, retries with a doubled ``max_bins`` (up to ``max_bins_cap``) instead
     of returning garbage - the same escalation ladder the batched sweep
-    runner applies per lane."""
+    runner applies per lane.  ``backend`` picks the scoring engine (see
+    ``BACKENDS``); the default "auto" resolves to the Pallas kernel on TPU
+    and the inline jnp scan step elsewhere."""
     assert policy in POLICIES, policy
+    backend = resolve_backend(backend)
     pdeps = inst.departures if predicted_durations is None \
         else inst.arrivals + predicted_durations
     times, kinds, items = event_sequence(inst)
@@ -229,9 +386,14 @@ def simulate(inst: Instance, policy: str = "first_fit",
     kinds_j, items_j = jnp.asarray(kinds), jnp.asarray(items)
     pdeps_j = jnp.asarray(pdeps)
     while True:
-        usage, opened, placements, overflow = _simulate(
-            sizes_j, times_j, kinds_j, items_j, pdeps_j,
-            policy=policy, max_bins=max_bins)
+        if backend == "jnp":
+            usage, opened, placements, overflow = _simulate(
+                sizes_j, times_j, kinds_j, items_j, pdeps_j,
+                policy=policy, max_bins=max_bins)
+        else:
+            usage, opened, placements, overflow = _simulate_kernel(
+                sizes_j, times_j, kinds_j, items_j, pdeps_j,
+                policy=policy, max_bins=max_bins, backend=backend)
         if not bool(overflow) or not auto_grow or max_bins >= max_bins_cap:
             break
         max_bins = grow_max_bins(max_bins, max_bins_cap)

@@ -1,14 +1,32 @@
-"""DVBP placement scoring Pallas TPU kernel - the paper's inner loop.
+"""DVBP placement Pallas TPU kernels - the paper's inner loop, fused.
 
-At cloud scale an arrival must be scored against thousands of open bins
-x d resource dims: a bandwidth-bound stream over the bins matrix, ideal for
-VMEM tiling.  Tiles of 256 bins x d(pad 128) are scored per grid step:
-feasibility (all dims fit, with the engine's EPS tolerance) + an l1/l2/linf
-fit score, and a running argmin is kept in SMEM scratch so the kernel emits
-the chosen bin directly (the Best-Fit/First-Fit decision, fused).
+At cloud scale an arrival must be scored against thousands of bin slots
+x d resource dims: a bandwidth-bound stream over the loads matrix, ideal for
+VMEM tiling.  Two kernels live here:
 
-Scores are +inf for infeasible bins.  First Fit == argmin over open-order
-index among feasible, realized by score = bin order index.
+``fitscore`` (legacy scoring kernel)
+    Tiles of 256 bins x d(pad 128) are scored per grid step: feasibility
+    (all dims fit, ``EPS`` tolerance) + an l1/l2/linf fit score, and a
+    running argmin in SMEM scratch emits the chosen bin directly.  Ties are
+    broken by **opening order** (``open_seq``; defaults to slot index), the
+    same rule the oracle engine applies when it walks open bins in opening
+    order and takes the first minimum.
+
+``fitscore_select_batch`` (the sweep scan's placement step)
+    The full fused placement decision for a *batch of lanes*, covering the
+    complete 8-policy score family of ``core.jaxsim`` (``SELECT_POLICIES``):
+    feasibility, policy score, oracle-consistent (score, open_seq)
+    lexicographic running argmin, the two-stage case-(a)/case-(b) select of
+    ``nrt_prioritized``, and first-free-slot selection - one VMEM-tiled pass
+    over a ``(lanes, bin-tiles)`` grid that emits the chosen slot per lane
+    plus ``found`` / ``no_free`` flags.  ``core.jaxsim._replay_batch`` calls
+    it once per event-scan step, so a whole sweep batch replays with zero
+    host round-trips.
+
+Constants ``SCORE_BIG`` / ``SCORE_NEG`` / ``F32_EPS`` / ``IBIG`` /
+``SELECT_POLICIES`` are the single source of truth for the scoring
+semantics; ``core.jaxsim`` and ``kernels.ops`` import them so the inline
+jnp paths and the kernel can never drift.
 """
 from __future__ import annotations
 
@@ -19,26 +37,36 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-EPS = 1e-9
-BIG = 3.0e38   # python float: baked into the kernel as an immediate
+EPS = 1e-9     # legacy fitscore tolerance (matches ref.fitscore_ref)
+BIG = 3.0e38   # python float: baked into the legacy kernel as an immediate
 
 NORMS = ("l1", "l2", "linf", "first_fit")
 
+# --- shared scoring semantics (core.jaxsim imports these; do not fork) ----
+SELECT_POLICIES = ("first_fit", "best_fit_l1", "best_fit_l2", "best_fit_linf",
+                   "mru", "greedy", "nrt_standard", "nrt_prioritized")
+SCORE_BIG = 1e30     # +BIG == infeasible slot
+SCORE_NEG = -1e30    # closes sentinel for virgin/closed slots
+F32_EPS = 1e-6       # fp32 capacity tolerance (oracle uses 1e-9/f64)
+IBIG = 2 ** 30      # int sentinel for (open_seq, row) tie-break argmins
 
-def _kernel(rem_ref, alive_ref, item_ref, score_ref, best_ref, *,
-            norm: str, bn: int, nb: int, n: int, d: int):
+
+def _kernel(rem_ref, alive_ref, oseq_ref, item_ref, score_ref, best_ref,
+            sseq_ref, *, norm: str, bn: int, nb: int, n: int, d: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         best_ref[0] = jnp.float32(BIG)
         best_ref[1] = jnp.float32(-1.0)
+        sseq_ref[0] = jnp.int32(IBIG)
 
     rem = rem_ref[...].astype(jnp.float32)        # (bn, dpad)
     item = item_ref[...].astype(jnp.float32)      # (1, dpad)
     after = rem - item
     dmask = jax.lax.broadcasted_iota(jnp.int32, after.shape, 1) < d
     rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    oseq = oseq_ref[...]                          # (bn, 1) int32
     alive = (alive_ref[...] > 0) & (rows < n)
     feasible = jnp.all((after >= -EPS) | ~dmask, axis=1, keepdims=True) & alive
 
@@ -50,22 +78,34 @@ def _kernel(rem_ref, alive_ref, item_ref, score_ref, best_ref, *,
     elif norm == "linf":
         score = jnp.max(jnp.where(dmask, after, -BIG), axis=1, keepdims=True)
     else:   # first_fit: prefer earliest-opened feasible bin
-        score = rows.astype(jnp.float32)
+        score = oseq.astype(jnp.float32)
     score = jnp.where(feasible, score, BIG)
     score_ref[...] = score
 
+    # (score, open_seq) lexicographic running argmin: the oracle walks open
+    # bins in opening order and keeps the first minimum, so score ties must
+    # fall to the earliest-opened bin - NOT the smallest slot index (a closed
+    # slot reused later has a small index but a late open_seq).
     tile_best = jnp.min(score)
-    tile_arg = jnp.argmin(score[:, 0])
+    tied_seq = jnp.where((score == tile_best) & feasible, oseq, IBIG)
+    tile_seq = jnp.min(tied_seq)
+    tied_row = jnp.where(tied_seq == tile_seq, rows, IBIG)
+    tile_arg = jnp.min(tied_row)
 
-    @pl.when(tile_best < best_ref[0])
+    better = (tile_best < best_ref[0]) | \
+        ((tile_best == best_ref[0]) & (tile_seq < sseq_ref[0]))
+
+    @pl.when(better)
     def _upd():
         best_ref[0] = tile_best
-        best_ref[1] = (i * bn + tile_arg).astype(jnp.float32)
+        best_ref[1] = tile_arg.astype(jnp.float32)
+        sseq_ref[0] = tile_seq
 
 
-def fitscore(remaining, alive, item, *, norm: str = "linf", bn: int = 256,
-             interpret: bool = False):
-    """remaining: (N,d); alive: (N,) bool/int; item: (d,).
+def fitscore(remaining, alive, item, open_seq=None, *, norm: str = "linf",
+             bn: int = 256, interpret: bool = False):
+    """remaining: (N,d); alive: (N,) bool/int; item: (d,); open_seq: (N,)
+    opening-order keys for tie-breaking (defaults to the slot index).
     Returns (scores (N,), best_idx scalar int32, -1 if none feasible)."""
     assert norm in NORMS
     N, d = remaining.shape
@@ -76,6 +116,10 @@ def fitscore(remaining, alive, item, *, norm: str = "linf", bn: int = 256,
     rem_p = rem_p.at[:N, :d].set(remaining)
     alive_p = jnp.zeros((nb * bn_, 1), jnp.int32).at[:N, 0].set(
         alive.astype(jnp.int32))
+    if open_seq is None:
+        open_seq = jnp.arange(N, dtype=jnp.int32)
+    oseq_p = jnp.full((nb * bn_, 1), IBIG, jnp.int32).at[:N, 0].set(
+        open_seq.astype(jnp.int32))
     item_p = jnp.zeros((1, dpad), remaining.dtype).at[0, :d].set(item)
 
     kernel = functools.partial(_kernel, norm=norm, bn=bn_, nb=nb, n=N, d=d)
@@ -84,6 +128,7 @@ def fitscore(remaining, alive, item, *, norm: str = "linf", bn: int = 256,
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((bn_, dpad), lambda i: (i, 0)),
+            pl.BlockSpec((bn_, 1), lambda i: (i, 0)),
             pl.BlockSpec((bn_, 1), lambda i: (i, 0)),
             pl.BlockSpec((1, dpad), lambda i: (0, 0)),
         ],
@@ -95,9 +140,182 @@ def fitscore(remaining, alive, item, *, norm: str = "linf", bn: int = 256,
             jax.ShapeDtypeStruct((nb * bn_, 1), jnp.float32),
             jax.ShapeDtypeStruct((2,), jnp.float32),
         ],
-        scratch_shapes=[],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
         interpret=interpret,
-    )(rem_p, alive_p, item_p)
+    )(rem_p, alive_p, oseq_p, item_p)
     scores = jnp.where(scores[:N, 0] >= BIG, jnp.inf, scores[:N, 0])
     best_idx = jnp.where(best[0] >= BIG, -1, best[1]).astype(jnp.int32)
     return scores, best_idx
+
+
+# ======================================================================
+# Fused batched placement-step kernel (all 8 jaxsim policies)
+# ======================================================================
+
+def _select_kernel(loads_ref, counts_ref, alive_ref, oseq_ref, aseq_ref,
+                   closes_ref, size_ref, dmask_ref, pdep_ref, now_ref,
+                   out_ref, fbest, ibest, *, policy: str, bn: int, nb: int,
+                   n: int):
+    """One (lane, bin-tile) grid step of the fused placement decision.
+
+    SMEM scratch layout (running state for the current lane; grid iterates
+    tiles innermost so it is reset at tile 0 and emitted at tile nb-1):
+      fbest[0] best case-(a) score     fbest[1] best case-(b) score
+      ibest[0] case-(a) open_seq       ibest[1] case-(a) slot
+      ibest[2] case-(b) open_seq       ibest[3] case-(b) slot
+      ibest[4] first free slot
+    Case (b) is only maintained for ``nrt_prioritized`` (its strict
+    case-(a)-before-case-(b) two-stage select); every other policy uses the
+    case-(a) registers alone.
+    """
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        fbest[0] = jnp.float32(SCORE_BIG)
+        fbest[1] = jnp.float32(SCORE_BIG)
+        ibest[0] = jnp.int32(IBIG)
+        ibest[1] = jnp.int32(0)
+        ibest[2] = jnp.int32(IBIG)
+        ibest[3] = jnp.int32(0)
+        ibest[4] = jnp.int32(IBIG)
+
+    loads = loads_ref[...].astype(jnp.float32)    # (1, bn, dpad)
+    size = size_ref[...].astype(jnp.float32)      # (1, dpad)
+    dmask = dmask_ref[...].astype(jnp.float32)    # (1, dpad)
+    counts = counts_ref[...]                      # (1, bn) int32
+    oseq = oseq_ref[...]                          # (1, bn) int32
+    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    rowmask = rows < n
+    alive = (alive_ref[...] > 0) & rowmask
+    pdep = pdep_ref[0, 0]
+    now = now_ref[0, 0]
+
+    # feasibility - the exact jnp expression of core.jaxsim._score
+    feasible = jnp.all(size[:, None, :] <= 1.0 - loads + F32_EPS,
+                       axis=2) & alive            # (1, bn)
+
+    if policy == "first_fit":
+        s = oseq.astype(jnp.float32)
+    elif policy == "mru":
+        s = -aseq_ref[...].astype(jnp.float32)
+    elif policy.startswith("best_fit"):
+        after = 1.0 - loads - size[:, None, :]    # (1, bn, dpad)
+        if policy.endswith("l1"):
+            s = jnp.sum(after * dmask[:, None, :], axis=2)
+        elif policy.endswith("l2"):
+            masked = after * dmask[:, None, :]
+            s = jnp.sqrt(jnp.sum(masked * masked, axis=2))
+        else:
+            s = jnp.max(jnp.where(dmask[:, None, :] > 0, after, SCORE_NEG),
+                        axis=2)
+    elif policy == "greedy":
+        s = -jnp.maximum(closes_ref[...], now)
+    elif policy == "nrt_standard":
+        s = jnp.abs(jnp.maximum(closes_ref[...], now) - pdep)
+    else:   # nrt_prioritized
+        gap = jnp.maximum(closes_ref[...], now) - pdep
+        sa = jnp.where(feasible & (gap >= 0), gap, SCORE_BIG)
+        sb = jnp.where(feasible & (gap < 0), -gap, SCORE_BIG)
+
+    def merge(score, f_slot: int, i_slot: int):
+        """(score, open_seq) lexicographic running argmin over tiles."""
+        tile_best = jnp.min(score)
+        tied_seq = jnp.where((score == tile_best) & feasible, oseq, IBIG)
+        tile_seq = jnp.min(tied_seq)
+        tile_arg = jnp.min(jnp.where(tied_seq == tile_seq, rows, IBIG))
+        better = (tile_best < fbest[f_slot]) | \
+            ((tile_best == fbest[f_slot]) & (tile_seq < ibest[i_slot]))
+
+        @pl.when(better)
+        def _():
+            fbest[f_slot] = tile_best
+            ibest[i_slot] = tile_seq
+            ibest[i_slot + 1] = tile_arg
+
+    if policy == "nrt_prioritized":
+        merge(sa, 0, 0)
+        merge(sb, 1, 2)
+    else:
+        merge(jnp.where(feasible, s, SCORE_BIG), 0, 0)
+
+    tile_free = jnp.min(jnp.where((counts == 0) & rowmask, rows, IBIG))
+    ibest[4] = jnp.minimum(ibest[4], tile_free)
+
+    @pl.when(i == nb - 1)
+    def _emit():
+        found_a = fbest[0] < SCORE_BIG
+        if policy == "nrt_prioritized":
+            found = found_a | (fbest[1] < SCORE_BIG)
+            best = jnp.where(found_a, ibest[1], ibest[3])
+        else:
+            found = found_a
+            best = ibest[1]
+        no_free = ibest[4] >= IBIG
+        free = jnp.where(no_free, 0, ibest[4])   # argmin-of-empty == 0 (jnp)
+        out_ref[b, 0] = jnp.where(found, best, free)
+        out_ref[b, 1] = found.astype(jnp.int32)
+        out_ref[b, 2] = no_free.astype(jnp.int32)
+
+
+def fitscore_select_batch(loads, counts, alive, open_seq, access_seq, closes,
+                          size, pdep, now, dmask, *, policy: str,
+                          bn: int = 256, interpret: bool = False):
+    """Fused batched DVBP placement step over ``L`` independent lanes.
+
+    loads: (L, N, d) per-slot load vectors; counts/alive/open_seq/access_seq/
+    closes: (L, N) slot state; size: (L, d) arriving item; pdep/now: (L,)
+    scalars; dmask: (L, d) real-dimension mask (1.0 real / 0.0 padding).
+
+    Returns ``(slot, found, no_free)``, each ``(L,)`` - the slot the policy
+    places into (the best feasible bin, else the first free slot, else slot
+    0 with ``no_free`` set), matching ``core.jaxsim._select_slot`` decision
+    -for-decision.
+    """
+    assert policy in SELECT_POLICIES, policy
+    L, N, d = loads.shape
+    dpad = max(128, -(-d // 128) * 128)
+    bn_ = min(bn, max(N, 8))
+    nb = -(-N // bn_)
+    Np = nb * bn_
+    f32, i32 = jnp.float32, jnp.int32
+    loads_p = jnp.zeros((L, Np, dpad), f32).at[:, :N, :d].set(
+        loads.astype(f32))
+    counts_p = jnp.zeros((L, Np), i32).at[:, :N].set(counts.astype(i32))
+    alive_p = jnp.zeros((L, Np), i32).at[:, :N].set(alive.astype(i32))
+    oseq_p = jnp.zeros((L, Np), i32).at[:, :N].set(open_seq.astype(i32))
+    aseq_p = jnp.zeros((L, Np), i32).at[:, :N].set(access_seq.astype(i32))
+    closes_p = jnp.zeros((L, Np), f32).at[:, :N].set(closes.astype(f32))
+    size_p = jnp.zeros((L, dpad), f32).at[:, :d].set(size.astype(f32))
+    dmask_p = jnp.zeros((L, dpad), f32).at[:, :d].set(dmask.astype(f32))
+    pdep_p = pdep.astype(f32).reshape(L, 1)
+    now_p = now.astype(f32).reshape(L, 1)
+
+    kernel = functools.partial(_select_kernel, policy=policy, bn=bn_, nb=nb,
+                               n=N)
+    out = pl.pallas_call(
+        kernel,
+        grid=(L, nb),
+        in_specs=[
+            pl.BlockSpec((1, bn_, dpad), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bn_), lambda b, i: (b, i)),
+            pl.BlockSpec((1, bn_), lambda b, i: (b, i)),
+            pl.BlockSpec((1, bn_), lambda b, i: (b, i)),
+            pl.BlockSpec((1, bn_), lambda b, i: (b, i)),
+            pl.BlockSpec((1, bn_), lambda b, i: (b, i)),
+            pl.BlockSpec((1, dpad), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, dpad), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((L, 3), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((2,), jnp.float32),
+                        pltpu.SMEM((8,), jnp.int32)],
+        interpret=interpret,
+    )(loads_p, counts_p, alive_p, oseq_p, aseq_p, closes_p, size_p, dmask_p,
+      pdep_p, now_p)
+    return out[:, 0], out[:, 1] > 0, out[:, 2] > 0

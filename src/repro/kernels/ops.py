@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import decode_attention as _decode_pallas
+from .fitscore import IBIG
 from .fitscore import fitscore as _fitscore_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .rwkv6_scan import rwkv6_chunked as _rwkv6_pallas
@@ -56,20 +57,50 @@ def rwkv6(r, k, v, logw, u, *, chunk=16, impl="auto"):
 
 
 @partial(jax.jit, static_argnames=("norm", "impl"))
-def fitscore(remaining, alive, item, *, norm="linf", impl="auto"):
+def fitscore(remaining, alive, item, open_seq=None, *, norm="linf",
+             impl="auto"):
+    """Scores + chosen bin.  Ties break by ``open_seq`` (opening order, the
+    oracle's rule); ``open_seq=None`` means slot index == opening order."""
     if _use_pallas(impl):
-        return _fitscore_pallas(remaining, alive, item, norm=norm)
+        return _fitscore_pallas(remaining, alive, item, open_seq, norm=norm)
     if impl == "pallas_interpret":
-        return _fitscore_pallas(remaining, alive, item, norm=norm,
+        return _fitscore_pallas(remaining, alive, item, open_seq, norm=norm,
                                 interpret=True)
+    n = remaining.shape[0]
+    if open_seq is None:
+        open_seq = jnp.arange(n, dtype=jnp.int32)
     if norm == "first_fit":
-        n = remaining.shape[0]
         feasible = jnp.all(remaining - item[None, :] >= -1e-9, axis=1) & \
             (alive > 0)
-        scores = jnp.where(feasible, jnp.arange(n, dtype=jnp.float32),
-                           jnp.inf)
+        scores = jnp.where(feasible, open_seq.astype(jnp.float32), jnp.inf)
     else:
         scores, feasible = ref.fitscore_ref(remaining, alive > 0, item,
                                             norm=norm)
-    best = jnp.where(jnp.isinf(scores).all(), -1, jnp.argmin(scores))
+    tie = scores <= jnp.min(scores)
+    best = jnp.argmin(jnp.where(tie, open_seq.astype(jnp.int32),
+                                jnp.int32(IBIG)))
+    best = jnp.where(jnp.isinf(scores).all(), -1, best)
     return scores, best.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("policy", "impl"))
+def fitscore_select(loads, counts, alive, open_seq, access_seq, closes,
+                    size, pdep, now, dmask=None, *, policy, impl="auto"):
+    """Fused single-state placement decision over the full 8-policy family
+    (``core.jaxsim.POLICIES``): loads (N,d), counts/alive/open_seq/
+    access_seq/closes (N,), size (d,), pdep/now scalars.  Returns
+    (slot, found, no_free); the serving scheduler's on-device select."""
+    from ..core.jaxsim import _select_slot   # leaf-safe: jaxsim -> fitscore
+    from .fitscore import fitscore_select_batch
+    if dmask is None:
+        dmask = jnp.ones_like(size)
+    if _use_pallas(impl) or impl == "pallas_interpret":
+        slot, found, no_free = fitscore_select_batch(
+            loads[None], counts[None], alive[None], open_seq[None],
+            access_seq[None], closes[None], size[None],
+            jnp.asarray(pdep, jnp.float32).reshape(1),
+            jnp.asarray(now, jnp.float32).reshape(1), dmask[None],
+            policy=policy, interpret=(impl == "pallas_interpret"))
+        return slot[0], found[0], no_free[0]
+    return _select_slot(policy, loads, counts, alive, open_seq, access_seq,
+                        closes, size, pdep, now, dmask)

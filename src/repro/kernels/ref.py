@@ -1,8 +1,13 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose targets).
 
-Deliberately the simplest correct implementations: full score矩阵 softmax for
-attention, a sequential lax.scan over time for RWKV6 - no chunking, no
+Deliberately the simplest correct implementations: full score-matrix softmax
+for attention, a sequential lax.scan over time for RWKV6 - no chunking, no
 blocking, no numerical tricks beyond fp32 softmax.
+
+``fitscore_ref`` scores only; the (score, opening-order) tie-break and
+free-slot selection that complete the placement decision live in
+``kernels.ops.fitscore`` / ``core.jaxsim._select_slot`` (and fused in the
+``kernels.fitscore`` Pallas kernels).
 """
 from __future__ import annotations
 

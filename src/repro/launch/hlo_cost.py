@@ -188,9 +188,14 @@ def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
     out_numel = _type_numel(op.type_str)
     m = _CONTRACT_RE.search(op.rest)
     contracted = 1
-    lhs = re.match(r"\s*(%[\w.\-]+)", op.rest)
-    if m and lhs and lhs.group(1) in shapes:
-        dims = _dims(shapes[lhs.group(1)])
+    # The lhs operand is printed either bare ("dot(%x, ...") or - on newer
+    # XLA - with its type inline ("dot(f32[256,256]{1,0} %x, ...").  Prefer
+    # the inline type; fall back to the computation's shape table.
+    lhs = re.match(r"\s*(?:([a-z0-9]+\[[\d,]*\])(?:\{[\d,]*\})?\s+)?"
+                   r"(%[\w.\-]+)", op.rest)
+    if m and lhs:
+        type_str = lhs.group(1) or shapes.get(lhs.group(2), "")
+        dims = _dims(type_str)
         if dims:
             shape = dims[0][1]
             for d in m.group(1).split(","):

@@ -10,8 +10,13 @@ time; a replica with no active requests is released ("bin closed").
 
 The scheduler drives the same BinPool + algorithm zoo as the offline engine,
 so every policy (First Fit ... Prioritized NRT ... modified PPE) is available
-verbatim.  On TPU the inner feasibility/score loop is the kernels/fitscore
-Pallas kernel (the host fallback is pure numpy).
+verbatim.  For the score-based 8-policy family (``core.jaxsim.POLICIES``)
+the placement decision can also run on-device via the fused
+``kernels.ops.fitscore_select`` kernel (``select_backend="auto"`` uses the
+Pallas kernel on TPU and its jnp twin elsewhere; "host" keeps the numpy
+algorithm zoo).  Both paths implement the same (score, opening-order)
+selection rule, so they agree decision-for-decision on fp32-exact sizes
+(tests/test_serving.py).
 """
 from __future__ import annotations
 
@@ -23,6 +28,10 @@ import numpy as np
 from ..core.bins import BinPool
 from ..core.types import Arrival
 from ..core.algorithms import get_algorithm
+
+# scheduler policy (+ kwargs) -> jaxsim/kernel policy name
+_DEVICE_POLICIES = ("first_fit", "best_fit", "mru", "greedy",
+                    "nrt_standard", "nrt_prioritized")
 
 
 @dataclasses.dataclass
@@ -60,11 +69,21 @@ class DVBPScheduler:
     def __init__(self, policy: str = "nrt_prioritized",
                  caps: ReplicaCapacity = ReplicaCapacity(),
                  policy_kwargs: Optional[Dict] = None,
-                 tokens_per_second: float = 50.0):
+                 tokens_per_second: float = 50.0,
+                 select_backend: str = "host"):
         self.caps = caps
         self.tps = tokens_per_second
         self.pool = BinPool(d=3)
         self.alg = get_algorithm(policy, **(policy_kwargs or {}))
+        self.select_backend = select_backend
+        if policy == "best_fit":
+            norm = (policy_kwargs or {}).get("norm", "linf")
+            self._device_policy = f"best_fit_{norm}"
+        else:
+            self._device_policy = policy
+        if select_backend != "host":
+            assert policy in _DEVICE_POLICIES, \
+                f"{policy!r} has no on-device select (host only)"
 
         class _Inst:   # minimal instance facade for algorithm.bind
             durations = np.array([1.0])
@@ -78,6 +97,31 @@ class DVBPScheduler:
         self._active: Dict[int, tuple] = {}   # rid -> (bin idx, size)
         self.placements: Dict[int, int] = {}
 
+    # ------------------------------------------------------ device fast path
+    def _select_device(self, size: np.ndarray, pdep: Optional[float],
+                       now: float) -> int:
+        """Fused on-device placement decision over the whole pool state.
+
+        The pool uses absolute, never-reused bin indices, so the kernel's
+        free-slot stage is disabled (counts=1: ``no_free`` always) and only
+        the best-feasible result is consulted; -1 means "open a new bin",
+        exactly the host algorithms' contract."""
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+        p = self.pool
+        slot, found, _no_free = ops.fitscore_select(
+            jnp.asarray(p.used, jnp.float32),
+            jnp.ones(p._cap, jnp.int32),
+            jnp.asarray(p.alive),
+            jnp.asarray(p.open_seq, jnp.int32),
+            jnp.asarray(p.access_seq, jnp.int32),
+            jnp.asarray(np.maximum(p.indicated_close, -1e30), jnp.float32),
+            jnp.asarray(size, jnp.float32),
+            float(pdep) if pdep is not None else float(now), float(now),
+            policy=self._device_policy, impl=self.select_backend)
+        return int(slot) if bool(found) else -1
+
     # ------------------------------------------------------------------- api
     def place(self, req: Request, now: float) -> int:
         """Place a request; returns the replica (bin) index."""
@@ -87,7 +131,10 @@ class DVBPScheduler:
             pdur = req.predicted_decode_len / self.tps
         pdep = None if pdur is None else now + pdur
         arr = Arrival(req.rid, size, now, pdep)
-        idx = self.alg.select_bin(arr)
+        if self.select_backend != "host":
+            idx = self._select_device(size, pdep, now)
+        else:
+            idx = self.alg.select_bin(arr)
         opened = idx < 0
         if opened:
             idx = self.pool.open_bin(now)

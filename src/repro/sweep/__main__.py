@@ -53,6 +53,13 @@ def main() -> None:
     ap.add_argument("--no-store", action="store_true")
     ap.add_argument("--force", action="store_true",
                     help="recompute even if the store has results")
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "jnp", "pallas", "pallas_interpret"],
+                    help="scoring engine (default auto: Pallas kernel on "
+                         "TPU, inline jnp elsewhere)")
+    ap.add_argument("--shard", default="auto",
+                    choices=["auto", "never", "always"],
+                    help="shard the lane axis over local devices")
     args = ap.parse_args()
 
     policies = tuple(POLICIES) if args.policies == "all" else \
@@ -72,7 +79,8 @@ def main() -> None:
     print(f"# sweep {spec.spec_hash()} -> "
           f"{store.path(spec) if store else '(not stored)'}")
     records = run_sweep(spec, store=store, force=args.force,
-                        progress=lambda m: print(f"# {m}", flush=True))
+                        progress=lambda m: print(f"# {m}", flush=True),
+                        backend=args.backend, shard=args.shard)
 
     print(f"{'policy':<18} {'pred':<14} {'n':>4} {'mean':>8} {'median':>8} "
           f"{'q1':>8} {'q3':>8}")

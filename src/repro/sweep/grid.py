@@ -142,8 +142,15 @@ def _group_cached(records: Dict[str, Dict], suite: SuiteSpec, policy: str,
 
 
 def run_sweep(spec: SweepSpec, store=None, force: bool = False,
-              progress=None) -> Dict[str, Dict]:
+              progress=None, backend: Optional[str] = None,
+              shard: str = "auto") -> Dict[str, Dict]:
     """Expand and run the grid; returns {result_key: record}.
+
+    ``backend`` / ``shard`` pick the replay engine and lane sharding (see
+    ``runner.run_batch``); they affect *how* the grid is computed, never the
+    results (the backends are bit-identical on fp32-exact instances), so
+    they are execution arguments rather than part of the hashed spec -
+    records computed on any backend share the store.
 
     record schema (also persisted by SweepStore, see sweep/README.md):
       usage_time, lower_bound, ratio, n_bins_opened, overflowed, max_bins,
@@ -177,7 +184,8 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
                 say(f"run  {suite.label()}/{policy}/{pred.label()} "
                     f"B={batch.B} S={len(seeds)}")
                 res = run_batch(batch, policy, pdeps, spec.max_bins,
-                                spec.max_bins_cap)
+                                spec.max_bins_cap, backend=backend,
+                                shard=shard)
                 for bi, inst in enumerate(insts):
                     for si, seed in enumerate(seeds):
                         records[result_key(suite, inst.name, policy, pred,

@@ -4,15 +4,30 @@
 prediction-seed row) in a single device computation - the per-instance
 ``jaxsim.simulate`` loop re-traces and re-dispatches once per (instance,
 policy) pair because every instance has its own event-tensor shape; here the
-padded batch compiles once per (B, S, max_bins, policy) and the scan runs all
-lanes in lockstep.
+padded batch compiles once per (B, S, max_bins, policy, backend) and the
+scan runs all lanes in lockstep.
 
-Overflow handling mirrors ``simulate(auto_grow=True)`` but lane-wise: after a
-batched run, any lane whose slot pool overflowed (in any seed row) is
+Backends (``jaxsim.BACKENDS``): with ``backend="jnp"`` every lane replays as
+its own vmapped scan (PR 1's path); with "pallas"/"pallas_interpret" the
+(B, S) grid flattens to one lane axis and replays as a *single* scan over
+the event index whose per-step placement decision is the fused
+``kernels.fitscore`` Pallas kernel batched over lanes - zero host round
+trips per step.  "auto" resolves to the kernel on TPU, jnp elsewhere.  Both
+paths are bit-identical on fp32-exact instances (tests/test_sweep.py).
+
+Sharding: when more than one local device is visible, the lane axis is
+sharded across them via ``compat.shard_map`` (lanes padded to a device
+multiple; each device replays its lane shard independently - the replay has
+no cross-lane communication, so the map is embarrassingly parallel).  With
+one device the plain single-device path runs, unchanged.
+
+Overflow handling mirrors ``simulate(auto_grow=True)`` but lane-wise: after
+a batched run, any lane whose slot pool overflowed (in any seed row) is
 gathered into a sub-batch and re-run with ``max_bins`` doubled, repeatedly,
-instead of returning garbage for those lanes.  Each escalation rung costs a
-re-compile for the (smaller) sub-batch shape; starting ``max_bins`` near the
-expected peak open-bin count avoids the ladder entirely.
+instead of returning garbage for those lanes.  The ladder composes with
+sharding (each rung re-pads and re-shards the surviving lanes).  Each rung
+costs a re-compile for the (smaller) sub-batch shape; starting ``max_bins``
+near the expected peak open-bin count avoids the ladder entirely.
 """
 from __future__ import annotations
 
@@ -24,25 +39,122 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.jaxsim import (MAX_BINS_CAP, POLICIES, _replay, grow_max_bins)
+from ..core.jaxsim import (MAX_BINS_CAP, POLICIES, _replay, _replay_batch,
+                           grow_max_bins, resolve_backend)
 from .batching import InstanceBatch, instances_pdeps
 
 
-@partial(jax.jit, static_argnames=("policy", "max_bins"))
-def _simulate_batch(sizes, times, kinds, items, pdeps, dmask, *,
-                    policy: str, max_bins: int):
+def _flatten_lanes(sizes, times, kinds, items, pdeps, dmask):
+    """Flatten the (B, S) grid to L = B*S lanes, lane = b*S + s: per-lane
+    arrays repeat b-major to match ``pdeps.reshape``'s row order (the single
+    source of the lane ordering for both the kernel and sharded paths)."""
+    B, S, n_max = pdeps.shape
+    rep = (lambda a: jnp.repeat(a, S, axis=0)) if S > 1 else (lambda a: a)
+    return (rep(sizes), rep(times), rep(kinds), rep(items),
+            pdeps.reshape(B * S, n_max), rep(dmask))
+
+
+def _simulate_batch_impl(sizes, times, kinds, items, pdeps, dmask, *,
+                         policy: str, max_bins: int, backend: str = "jnp"):
     """pdeps: (B, S, n_max); everything else (B, ...).  Returns
     (usage (B,S), opened (B,S), overflow (B,S)) - placements are dead-code
-    eliminated to keep device->host transfers small."""
+    eliminated to keep device->host transfers small.
 
-    def lane(sz, t, k, it, pd_rows, dm):
-        def one(p):
+    Un-jitted on purpose: ``_simulate_batch_sharded`` traces this inside a
+    ``shard_map`` body, and a nested ``jax.jit`` there leaks per-shard
+    sharding annotations that fail HLO verification on jax 0.4.x."""
+    if backend == "jnp":
+        def lane(sz, t, k, it, pd_rows, dm):
+            def one(p):
+                usage, opened, _placements, overflow = _replay(
+                    sz, t, k, it, p, dm, policy=policy, max_bins=max_bins)
+                return usage, opened, overflow
+            return jax.vmap(one)(pd_rows)
+
+        return jax.vmap(lane)(sizes, times, kinds, items, pdeps, dmask)
+
+    # kernel path: flatten the (B, S) grid to one lane axis (lane = b*S + s)
+    # and replay everything in one scan over the event index, so each step's
+    # placement decision is a single lane-batched Pallas kernel call.
+    B, S, _ = pdeps.shape
+    usage, opened, _placements, overflow = _replay_batch(
+        *_flatten_lanes(sizes, times, kinds, items, pdeps, dmask),
+        policy=policy, max_bins=max_bins, backend=backend)
+    return (usage.reshape(B, S), opened.reshape(B, S),
+            overflow.reshape(B, S))
+
+
+_simulate_batch = jax.jit(_simulate_batch_impl,
+                          static_argnames=("policy", "max_bins", "backend"))
+
+
+def lane_device_count() -> int:
+    """Local devices available to shard the lane axis over."""
+    return jax.local_device_count()
+
+
+def _simulate_lanes_impl(sizes, times, kinds, items, pdeps, dmask, *,
+                         policy: str, max_bins: int, backend: str):
+    """Flattened-lane replay: ``pdeps`` is (L, n_max) - exactly one
+    prediction row per lane.  This is the shard_map body: a *single-level*
+    vmap (or the lane-batched kernel scan), because a nested
+    vmap-over-seeds inside a shard body trips jax 0.4.x's sharding
+    propagation (invalid tile_assignment at HLO verification)."""
+    if backend == "jnp":
+        def one(sz, t, k, it, pd, dm):
             usage, opened, _placements, overflow = _replay(
-                sz, t, k, it, p, dm, policy=policy, max_bins=max_bins)
+                sz, t, k, it, pd, dm, policy=policy, max_bins=max_bins)
             return usage, opened, overflow
-        return jax.vmap(one)(pd_rows)
+        return jax.vmap(one)(sizes, times, kinds, items, pdeps, dmask)
+    usage, opened, _placements, overflow = _replay_batch(
+        sizes, times, kinds, items, pdeps, dmask,
+        policy=policy, max_bins=max_bins, backend=backend)
+    return usage, opened, overflow
 
-    return jax.vmap(lane)(sizes, times, kinds, items, pdeps, dmask)
+
+@partial(jax.jit, static_argnames=("policy", "max_bins", "backend", "ndev"))
+def _simulate_batch_sharded(sizes, times, kinds, items, pdeps, dmask, *,
+                            policy: str, max_bins: int, backend: str,
+                            ndev: int):
+    """Shard the flattened lane axis over ``ndev`` local devices.  L must
+    be a multiple of ndev (``_run_arrays`` pads); each shard replays its
+    lanes with the plain single-device computation - no collectives."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from ..compat import shard_map
+    mesh = Mesh(np.asarray(jax.local_devices()[:ndev]), ("lanes",))
+    f = shard_map(
+        partial(_simulate_lanes_impl, policy=policy, max_bins=max_bins,
+                backend=backend),
+        mesh=mesh, in_specs=P("lanes"), out_specs=P("lanes"),
+        check_vma=False)
+    return f(sizes, times, kinds, items, pdeps, dmask)
+
+
+def _run_arrays(arrays, *, policy: str, max_bins: int, backend: str,
+                ndev: int):
+    """One batched run, sharded over lanes when ndev > 1.
+
+    The sharded path flattens the (B, S) grid to L = B*S lanes (so seed
+    rows balance across devices too), pads L to a device multiple by
+    replicating existing lanes - wrapping around when fewer than ``pad``
+    lanes exist - and drops the padding rows on the way out."""
+    if ndev <= 1:
+        return _simulate_batch(*arrays, policy=policy, max_bins=max_bins,
+                               backend=backend)
+    B, S, _ = arrays[4].shape
+    flat = _flatten_lanes(*arrays)
+    L = B * S
+    pad = (-L) % ndev
+    if pad:
+        reps = -(-pad // L)   # ceil: enough copies even when pad > L
+        flat = tuple(jnp.concatenate([a] + [a] * reps, axis=0)[:L + pad]
+                     for a in flat)
+    u, o, ov = _simulate_batch_sharded(*flat, policy=policy,
+                                       max_bins=max_bins, backend=backend,
+                                       ndev=ndev)
+    return (u[:L].reshape(B, S), o[:L].reshape(B, S),
+            ov[:L].reshape(B, S))
 
 
 @dataclasses.dataclass
@@ -60,18 +172,29 @@ class BatchRunResult:
 def run_batch(batch: InstanceBatch, policy: str,
               pdeps: Optional[np.ndarray] = None, max_bins: int = 64,
               max_bins_cap: int = MAX_BINS_CAP,
-              auto_grow: bool = True) -> BatchRunResult:
+              auto_grow: bool = True, backend: Optional[str] = None,
+              shard: str = "auto") -> BatchRunResult:
     """Replay every lane of ``batch`` under ``policy``.
 
     ``pdeps``: (B, S, n_max) predicted departure times (see
     ``batching.pad_predictions``); defaults to the real departures
     (clairvoyant / non-clairvoyant replay).
+
+    ``backend``: scoring engine (``jaxsim.BACKENDS``; None == "auto" ==
+    Pallas kernel on TPU, inline jnp elsewhere).  ``shard``: "auto" shards
+    the lane axis over all local devices when more than one is visible;
+    "never" forces the single-device path; "always" asserts multi-device.
     """
     assert policy in POLICIES, policy
+    assert shard in ("auto", "never", "always"), shard
+    backend = resolve_backend(backend)
     if pdeps is None:
         pdeps = instances_pdeps(batch)
     B, S, _ = pdeps.shape
     assert B == batch.B
+    ndev = 1 if shard == "never" else lane_device_count()
+    if shard == "always":
+        assert ndev > 1, "shard='always' requires multiple local devices"
 
     usage = np.zeros((B, S))
     opened = np.zeros((B, S), np.int64)
@@ -83,7 +206,8 @@ def run_batch(batch: InstanceBatch, policy: str,
               batch.dmask)
     while True:
         sub = tuple(jnp.asarray(a[lanes]) for a in arrays)
-        u, o, ov = _simulate_batch(*sub, policy=policy, max_bins=mb)
+        u, o, ov = _run_arrays(sub, policy=policy, max_bins=mb,
+                               backend=backend, ndev=ndev)
         usage[lanes] = np.asarray(u)
         opened[lanes] = np.asarray(o)
         over[lanes] = np.asarray(ov)
@@ -97,7 +221,10 @@ def run_batch(batch: InstanceBatch, policy: str,
 
 def run_grid(batch: InstanceBatch, policies: Sequence[str],
              pdeps: Optional[np.ndarray] = None, max_bins: int = 64,
-             max_bins_cap: int = MAX_BINS_CAP) -> Dict[str, BatchRunResult]:
+             max_bins_cap: int = MAX_BINS_CAP,
+             backend: Optional[str] = None,
+             shard: str = "auto") -> Dict[str, BatchRunResult]:
     """One batched run per policy over the same instance batch."""
-    return {p: run_batch(batch, p, pdeps, max_bins, max_bins_cap)
+    return {p: run_batch(batch, p, pdeps, max_bins, max_bins_cap,
+                         backend=backend, shard=shard)
             for p in policies}

@@ -113,3 +113,23 @@ def test_fitscore_no_feasible():
     item = jnp.ones(3) * 0.5
     _, b = ops.fitscore(rem, alive, item, impl="pallas_interpret")
     assert int(b) == -1
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_fitscore_ties_break_by_open_seq(impl):
+    """Score ties fall to the earliest-*opened* bin (the oracle's rule), not
+    the smallest slot index: slots 0/2 tie but slot 2 opened first."""
+    rem = jnp.array([[0.5, 0.5], [0.125, 0.75], [0.5, 0.5]])
+    alive = jnp.ones(3, bool)
+    item = jnp.array([0.25, 0.25])
+    open_seq = jnp.array([7, 3, 1], jnp.int32)
+    for norm in ("l1", "l2", "linf"):
+        _, b = ops.fitscore(rem, alive, item, open_seq, norm=norm, impl=impl)
+        assert int(b) == 2, (impl, norm)
+    # without open_seq the slot index is the opening order: slot 0 wins
+    _, b = ops.fitscore(rem, alive, item, norm="linf", impl=impl)
+    assert int(b) == 0, impl
+    # first_fit scores ARE the opening order
+    _, b = ops.fitscore(rem, alive, item, open_seq, norm="first_fit",
+                        impl=impl)
+    assert int(b) == 2, impl

@@ -131,6 +131,38 @@ def test_dvbp_policies_respect_replica_capacity(policy):
     assert sched.stats.replica_seconds > 0
 
 
+@pytest.mark.parametrize("policy,kwargs", [
+    ("first_fit", None), ("best_fit", {"norm": "linf"}), ("mru", None),
+    ("greedy", None), ("nrt_standard", None), ("nrt_prioritized", None),
+])
+def test_scheduler_device_select_matches_host(policy, kwargs):
+    """The fused on-device placement decision (kernels.ops.fitscore_select)
+    agrees with the host algorithm zoo decision-for-decision - including
+    the opening-order tie-break - on fp32-exact request sizes."""
+    caps = ReplicaCapacity(slots=4, kv_tokens=65536, prefill_budget=262144)
+
+    def drive(backend):
+        sched = DVBPScheduler(policy, caps, kwargs, select_backend=backend)
+        rng = np.random.default_rng(5)
+        live, t, picks = [], 0.0, []
+        for rid in range(150):
+            t += float(rng.integers(1, 8))
+            while live and live[0][0] <= t:
+                ft, r = live.pop(0)
+                sched.finish(r, ft)
+            req = Request(rid, t, int(rng.integers(16, 512)),
+                          int(rng.integers(8, 1024)),
+                          predicted_decode_len=int(rng.integers(8, 1024)))
+            picks.append(sched.place(req, t))
+            live.append((t + req.decode_len / 50.0, rid))
+            live.sort()
+        return picks, sched.stats.replicas_opened
+
+    host = drive("host")
+    assert host == drive("jnp")
+    assert host == drive("pallas_interpret")
+
+
 def test_fleet_objective_accounting():
     # one request -> exactly its service time of replica-seconds
     reqs = [Request(0, 0.0, 64, 500)]
