@@ -8,11 +8,12 @@ bound).  Scale knobs: BENCH_INSTANCES (default 12), BENCH_ITEMS (default
 the knobs to reproduce at full scale.  If the real Azure trace is present
 under data/azure/, it is used instead of the synthetic family.
 
-Policies in ``jaxsim.POLICIES`` (the score-based Any Fit family) are driven
-through the batched sweep runner (``repro.sweep``): the whole suite - and,
-for noise sweeps, all seeds - replays as one vmapped scan per policy.
-Category-structured policies (hybrid, RCP/PPE, CBD...) keep the host oracle
-path.  Set BENCH_SWEEP=0 to force everything through the oracle.
+Policies in ``jaxsim.SCAN_POLICIES`` - the score-based Any Fit family AND
+the category-structured families (hybrid, RCP/PPE, CBD/CBDT, lifetime
+alignment, adaptive) - are driven through the batched sweep runner
+(``repro.sweep``): the whole suite - and, for noise sweeps, all seeds -
+replays as one lane-batched scan per policy.  Set BENCH_SWEEP=0 to force
+everything through the host oracle engine instead.
 """
 from __future__ import annotations
 
@@ -26,7 +27,6 @@ import numpy as np
 from repro.core import (BoxStats, get_algorithm, lognormal_predictions,
                         lognormal_predictions_batch, lower_bound, run,
                         uniform_predictions, uniform_predictions_batch)
-from repro.core.jaxsim import POLICIES as JAXSIM_POLICIES
 from repro.data import load_azure_csv, make_azure_like_suite, \
     make_huawei_like_suite
 
@@ -68,11 +68,19 @@ def _packed(suite_name: str):
 
 
 def _jaxsim_policy(name: str, kw: Dict) -> Optional[str]:
-    """jaxsim policy string for (registry name, kwargs), or None if the
-    algorithm is category-structured and must run on the host oracle."""
+    """jaxsim scan-policy string for (registry name, kwargs), or None if
+    the combination has no batched lane (next_fit / rr_next_fit and exotic
+    kwargs stay on the host oracle)."""
+    from repro.core.jaxsim import known_policy
     if name == "best_fit" and set(kw) <= {"norm"}:
         return f"best_fit_{kw.get('norm', 'linf')}"
-    if name in JAXSIM_POLICIES and not kw:
+    if name == "cbd" and set(kw) <= {"beta"}:
+        return f"cbd_beta{kw.get('beta', 2.0):g}"
+    if name == "cbdt" and set(kw) <= {"rho"} and "rho" in kw:
+        return f"cbdt_rho{kw['rho']:g}"
+    if name == "lifetime_alignment" and set(kw) <= {"mode"}:
+        return f"la_{kw.get('mode', 'binary')}"
+    if not kw and known_policy(name):
         return name
     return None
 
@@ -111,7 +119,7 @@ def evaluate(algorithm_factory, *, suite: str = "azure",
 
     Returns (per-instance mean ratios, wall seconds per run)."""
     policy = getattr(algorithm_factory, "jaxsim_policy", None)
-    if USE_SWEEP and policy in JAXSIM_POLICIES:
+    if USE_SWEEP and policy is not None:
         return _evaluate_batched(policy, suite, sigma, eps, seeds)
     insts = _suite(suite)
     ratios = []

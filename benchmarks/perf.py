@@ -89,6 +89,139 @@ def fitscore_step(lanes: int = 8, n_slots: int = 4096,
             f"perf/fitscore_step_pallas,{t_p*1e6:.0f},{per_us/t_p:.2f}"]
 
 
+def replay_carry(lanes: int = 8, n_slots: int = 2048,
+                 d: int = 5) -> List[str]:
+    """The padded-carry refactor in isolation: the sweep scan used to
+    re-pad its whole (slots, d) state into the kernel's (Np, dpad=128)
+    layout on every event step (~25x redundant traffic at d=5); the carry
+    now lives pre-padded across the scan.
+
+    ``perf/replay_carry_repad``  - per-step select INCLUDING the state
+    re-pad (the pre-refactor cost; derived column: GB re-padded per call).
+    ``perf/replay_carry_padded`` - per-step select on the pre-padded carry
+    (the new cost; derived column: speedup over the repad path).
+    Measured on the jnp twin of the select so the comparison isolates data
+    movement, not Pallas interpret overhead."""
+    from functools import partial
+
+    from repro.core.jaxsim import _select_slot
+    from repro.kernels.fitscore import select_pad_geometry
+    Np, dpad, _, _ = select_pad_geometry(n_slots, d)
+    rng = np.random.default_rng(0)
+    loads = jnp.asarray(rng.random((lanes, n_slots, d)) * 0.5, jnp.float32)
+    counts = jnp.asarray((rng.random((lanes, n_slots)) > 0.3)
+                         .astype(np.int32))
+    oseq = jnp.asarray(np.tile(rng.permutation(n_slots), (lanes, 1))
+                       .astype(np.int32))
+    closes = jnp.asarray(rng.random((lanes, n_slots)) * 1e4, jnp.float32)
+    size = jnp.asarray(rng.random((lanes, d)) * 0.3, jnp.float32)
+    pdep = jnp.asarray(rng.random(lanes) * 1e4, jnp.float32)
+    now = jnp.asarray(rng.random(lanes) * 1e3, jnp.float32)
+
+    @jax.jit
+    def pad_state(loads, counts, oseq, closes, size):
+        f32, i32 = jnp.float32, jnp.int32
+        return (jnp.zeros((lanes, Np, dpad), f32)
+                .at[:, :n_slots, :d].set(loads),
+                jnp.zeros((lanes, Np), i32).at[:, :n_slots].set(counts),
+                jnp.zeros((lanes, Np), i32).at[:, :n_slots].set(oseq),
+                jnp.full((lanes, Np), -1e30, f32)
+                .at[:, :n_slots].set(closes),
+                jnp.zeros((lanes, dpad), f32).at[:, :d].set(size))
+
+    dmask_p = jnp.zeros((lanes, dpad), jnp.float32).at[:, :d].set(1.0)
+
+    def select_padded(lp, cp, op, clp, sp):
+        return jax.vmap(partial(_select_slot, "best_fit_linf"))(
+            lp, cp, cp > 0, op, op, clp, sp, pdep, now, dmask_p, None)
+
+    sel = jax.jit(select_padded)
+    repad = jax.jit(lambda *a: select_padded(*pad_state(*a)))
+    compact = (loads, counts, oseq, closes, size)
+    t_repad = _timeit(lambda: repad(*compact))
+    padded = jax.block_until_ready(pad_state(*compact))
+    t_padded = _timeit(lambda: sel(*padded))
+    gb = lanes * Np * (dpad + 3) * 4 / 1e9   # padded state written per step
+    return [f"perf/replay_carry_repad,{t_repad*1e6:.0f},{gb/t_repad:.2f}",
+            f"perf/replay_carry_padded,{t_padded*1e6:.0f},"
+            f"{t_repad/t_padded:.2f}"]
+
+
+def sweep_categories(n_instances: int = 28, n_items: int = 250,
+                     policies=("cbd", "reduced_hybrid", "ppe_modified",
+                               "la_binary"),
+                     seeds=(0, 1, 2, 3, 4, 5)) -> List[str]:
+    """Category-structured policies on the paper's noisy-prediction grid
+    shape (instances x seeds): the host oracle loop (their only path before
+    the unified replay engine) vs batched scan lanes.
+
+    Three rows per grid: the host loop, the batched scan cold (wall clock
+    including the per-policy compile, this suite's convention), and the
+    batched scan warm (compile amortized - the steady state of extending a
+    sweep, and the honest CPU proxy for the TPU lane-parallel win; derived
+    column: speedup over the loop)."""
+    from repro.core import run
+    from repro.core.jaxsim import host_algorithm
+    from repro.core.predictions import lognormal_predictions_batch
+    from repro.data import make_azure_like_suite
+    from repro.sweep import pack_instances, pad_predictions, run_batch
+    insts = make_azure_like_suite(n_instances=n_instances, n_items=n_items,
+                                  seed=11)
+    preds = [lognormal_predictions_batch(i, 1.0, seeds) for i in insts]
+    n_runs = n_instances * len(seeds) * len(policies)
+
+    t0 = time.time()
+    loop_usage = 0.0
+    for p in policies:
+        for inst, pr in zip(insts, preds):
+            for s in range(len(seeds)):
+                loop_usage += run(inst, host_algorithm(p),
+                                  predicted_durations=pr[s]).usage_time
+    t_loop = time.time() - t0
+
+    t0 = time.time()
+    batch = pack_instances(insts)
+    pdeps = pad_predictions(batch, preds)
+    batch_usage = 0.0
+    for p in policies:
+        batch_usage += float(run_batch(batch, p, pdeps, max_bins=64)
+                             .usage_time.sum())
+    t_cold = time.time() - t0
+    t0 = time.time()
+    for p in policies:
+        run_batch(batch, p, pdeps, max_bins=64)
+    t_warm = time.time() - t0
+
+    tag = f"{n_instances}x{len(policies)}"
+    return [f"perf/sweep_categories_loop_{tag},{t_loop/n_runs*1e6:.0f},"
+            f"{loop_usage:.0f}",
+            f"perf/sweep_categories_{tag},{t_cold/n_runs*1e6:.0f},"
+            f"{batch_usage:.0f}",
+            f"perf/sweep_categories_warm_{tag},{t_warm/n_runs*1e6:.0f},"
+            f"{t_loop/t_warm:.2f}"]
+
+
+def sweep_batched_only(n_instances: int = 28, n_items: int = 250,
+                       policies=("first_fit", "best_fit_l2", "greedy",
+                                 "nrt_prioritized")) -> List[str]:
+    """Just the batched side of ``sweep_grid`` (same row name, same grid):
+    the regression-gate row for CI, where re-timing the slow per-instance
+    loop baseline on every push would dominate the job."""
+    from repro.data import make_azure_like_suite
+    from repro.sweep import pack_instances, run_batch
+    insts = make_azure_like_suite(n_instances=n_instances, n_items=n_items,
+                                  seed=11)
+    n_runs = n_instances * len(policies)
+    t0 = time.time()
+    batch = pack_instances(insts)
+    usage = sum(float(run_batch(batch, p, max_bins=64).usage_time.sum())
+                for p in policies)
+    t_batch = time.time() - t0
+    tag = f"{n_instances}x{len(policies)}"
+    return [f"perf/sweep_batched_{tag},{t_batch/n_runs*1e6:.0f},"
+            f"{usage:.0f}"]
+
+
 _SHARDED_BENCH = """
 import time
 import jax, numpy as np

@@ -74,12 +74,23 @@ def main() -> None:
         # emulation programs bloat the in-process XLA state enough to skew
         # the headline sweep timing (which includes compilation).
         groups = [perf.kernels, perf.jaxsim_vs_oracle, perf.serving_fleet,
-                  perf.sweep_grid, perf.fitscore_step, perf.sweep_sharded,
+                  perf.sweep_grid, perf.sweep_categories, perf.replay_carry,
+                  perf.fitscore_step, perf.sweep_sharded,
                   perf.roofline_summary]
         if args.fast:
+            # sweep_batched_only re-times the full-size headline row
+            # (perf/sweep_batched_28x4) without the slow loop baseline -
+            # CI gates on it against the committed BENCH_sweep.json.
             groups = [lambda: perf.sweep_grid(n_instances=6, n_items=120,
                                               policies=("first_fit",
                                                         "greedy")),
+                      perf.sweep_batched_only,
+                      lambda: perf.sweep_categories(n_instances=6,
+                                                    n_items=120,
+                                                    policies=("cbd",
+                                                              "la_binary"),
+                                                    seeds=(0, 1)),
+                      perf.replay_carry,
                       lambda: perf.fitscore_step(lanes=2, n_slots=512)]
         for group in groups:
             try:

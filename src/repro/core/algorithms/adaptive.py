@@ -13,6 +13,14 @@ for the current regime:
     else                     -> first_fit        (error-oblivious; what PPE
                                                   degenerates to anyway)
 
+The error signal itself lives in ``DepartureErrorEstimator`` - one shared
+running-max estimator consumed by AdaptiveSwitch, by PPE's guess-and-double
+alpha (``learned._RCPBase``), and - via the pure ``prediction_error_jnp`` /
+``pow2_ceiling_jnp`` twins - by the batched scan's carried err/alpha scalars
+(``core.jaxsim._replay_batch``).  The estimator is updated once per
+*departure*; arrivals only read it (O(1) per event: no per-arrival
+recomputation and no per-item dict churn).
+
 All three sub-policies are *pool-stateless* (they read bin state from the
 shared BinPool and keep no private structures), so switching between them
 mid-stream is exactly an Any Fit algorithm and inherits Greedy/NRT's
@@ -21,12 +29,63 @@ benchmarks/figures.py (fig15_adaptive); validated in tests/test_adaptive.py.
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 from ..types import Arrival
 from .base import Algorithm, register
 from .anyfit import FirstFit
 from .departure import Greedy, PrioritizedNRT
+
+
+def prediction_error(rdur, pdur):
+    """Multiplicative misprediction max(rdur/pdur, pdur/rdur), vectorized."""
+    pdur = np.maximum(pdur, 1e-12)
+    return np.maximum(rdur / pdur, pdur / rdur)
+
+
+def prediction_error_jnp(rdur, pdur):
+    """jnp twin of :func:`prediction_error` (the batched scan's per-item
+    departure-error input)."""
+    import jax.numpy as jnp
+    pdur = jnp.maximum(pdur, 1e-12)
+    return jnp.maximum(rdur / pdur, pdur / rdur)
+
+
+def pow2_ceiling(x: float) -> float:
+    """Smallest power of two >= x - the fixed point of guess-and-double
+    starting from any power of two <= x.  Exact via frexp."""
+    m, e = math.frexp(x)
+    return math.ldexp(0.5 if m == 0.5 else 1.0, e)
+
+
+def pow2_ceiling_jnp(x):
+    """jnp twin of :func:`pow2_ceiling`, vectorized."""
+    import jax.numpy as jnp
+    m, e = jnp.frexp(x)
+    return jnp.ldexp(jnp.where(m == 0.5, 0.5, 1.0).astype(x.dtype), e)
+
+
+class DepartureErrorEstimator:
+    """Running max multiplicative prediction error over departed items.
+
+    The single online error signal the paper's §VI-C machinery consumes:
+    PPE's guess-and-double alpha is ``pow2_ceiling(err)`` and
+    AdaptiveSwitch's regime is a piecewise-constant function of ``err``.
+    ``observe`` is called once per departure; reading ``err`` is O(1).
+    """
+
+    def __init__(self):
+        self.err = 1.0
+
+    def observe(self, rdur: float, pdur: float) -> float:
+        self.err = max(self.err, float(prediction_error(rdur, pdur)))
+        return self.err
+
+    def pow2_alpha(self) -> float:
+        """Guess-and-double alpha: smallest power of two >= err."""
+        return pow2_ceiling(self.err)
 
 
 @register("adaptive")
@@ -44,20 +103,33 @@ class AdaptiveSwitch(Algorithm):
         super().bind(pool, inst)
         for s in self._subs:
             s.bind(pool, inst)
-        self._err = 1.0
-        self._pdur = {}
+        self.estimator = DepartureErrorEstimator()
+        # predicted durations recorded at arrival (the estimator may only
+        # use information the online algorithm has seen); dense array for
+        # instance replays, dict overflow for open-ended streams whose
+        # caller-chosen ids may be sparse (serving request ids)
+        self._pdur = np.zeros(max(inst.n_items, 1))
+        self._pdur_extra = {}
         self.regime_switches = 0
         self._last = 0
 
+    @property
+    def _err(self) -> float:   # kept for tests/introspection
+        return self.estimator.err
+
     def _active_index(self) -> int:
-        if self._err < self.low:
+        err = self.estimator.err
+        if err < self.low:
             return 0
-        if self._err < self.high:
+        if err < self.high:
             return 1
         return 2
 
     def select_bin(self, arr: Arrival) -> int:
-        self._pdur[arr.idx] = max(arr.pdur, 1e-12)
+        if arr.idx < len(self._pdur):
+            self._pdur[arr.idx] = max(arr.pdur, 1e-12)
+        else:                              # open-ended stream (serving)
+            self._pdur_extra[arr.idx] = max(arr.pdur, 1e-12)
         k = self._active_index()
         if k != self._last:
             self.regime_switches += 1
@@ -65,8 +137,8 @@ class AdaptiveSwitch(Algorithm):
         return self._subs[k].select_bin(arr)
 
     def on_departed(self, item: int, idx: int, now: float, size: np.ndarray):
-        pdur = self._pdur.pop(item, None)
-        if pdur is not None:
-            rdur = float(self.inst.departures[item]
-                         - self.inst.arrivals[item])
-            self._err = max(self._err, rdur / pdur, pdur / rdur)
+        if item >= len(self.inst.departures):
+            self._pdur_extra.pop(item, None)
+            return   # open-ended stream: no ground-truth duration to score
+        rdur = float(self.inst.departures[item] - self.inst.arrivals[item])
+        self.estimator.observe(rdur, self._pdur[item])

@@ -13,6 +13,20 @@ from ..types import Arrival
 from .base import Algorithm, register
 
 
+def departure_window(pdep, rho: float):
+    """CBDT class: index of the rho-wide horizon window holding a
+    (predicted) departure time, vectorized.  Shared by the host class, the
+    batched scan (via the jnp twin) and the serving scheduler's category
+    mask, so every path agrees on the window boundary."""
+    return np.floor(np.asarray(pdep) / rho).astype(np.int64)
+
+
+def departure_window_jnp(pdep, rho: float):
+    """jnp twin of :func:`departure_window`."""
+    import jax.numpy as jnp
+    return jnp.floor(pdep / rho).astype(jnp.int32)
+
+
 @register("cbdt")
 class ClassifyByDepartureTime(Algorithm):
     """Partition the horizon into rho-wide windows; items whose departure
@@ -28,7 +42,7 @@ class ClassifyByDepartureTime(Algorithm):
         self.name = f"cbdt_rho{rho:g}"
 
     def select_bin(self, arr: Arrival) -> int:
-        cat = int(np.floor(arr.pdep / self.rho))
+        cat = int(departure_window(arr.pdep, self.rho))
         self._cat = cat
         open_idx = self.pool.open_indices()
         same = open_idx[self.pool.tag[open_idx] == cat]

@@ -7,6 +7,14 @@ O(d sqrt(log mu)) for both hybrids under this adaptation).  The direct-sum
 variant [17] instead splits items into d classes by their largest dimension
 and runs an independent single-dimensional copy per class (within a class,
 feasibility in the max dimension implies feasibility in all dimensions).
+
+The *categorization* math (duration exponents, CBD duration classes, hybrid
+thresholds) lives in pure functions with numpy and jnp twins so the host
+oracle classes here and the batched scan (``core.jaxsim._replay_batch``)
+share one definition and agree decision-for-decision.  Power-of-two class
+boundaries are computed via ``frexp`` (exact for every representable float)
+rather than ``log2`` (whose rounding can misclassify durations that are
+exact powers of two).
 """
 from __future__ import annotations
 
@@ -19,10 +27,59 @@ from ..types import EPS, Arrival
 from .base import Algorithm, register
 
 
+# ---------------------------------------------------------------- categories
+def dur_exponent(dur):
+    """j with dur in [2^(j-1), 2^j), vectorized; exact via frexp.
+
+    ``frexp(d) = (m, e)`` with ``d = m 2^e``, ``m in [0.5, 1)``, so
+    ``floor(log2 d) + 1 == e`` exactly - no log rounding at the class
+    boundaries (``log2(2^k)`` may round to just under ``k`` in fp32)."""
+    return np.frexp(np.maximum(dur, 1e-12))[1]
+
+
+def dur_exponent_jnp(dur):
+    """jnp twin of :func:`dur_exponent` (used inside the batched scan)."""
+    import jax.numpy as jnp
+    return jnp.frexp(jnp.maximum(dur, 1e-12))[1].astype(jnp.int32)
+
+
+def duration_class(dur, beta: float = 2.0):
+    """CBD class i with dur in [beta^(i-1), beta^i), vectorized.
+
+    beta == 2 uses the exact frexp path (bit-exact in both twins at every
+    precision).  Other bases fall back to the log ratio, where this f64
+    host path and the scan's f32 jnp twin can round a duration sitting
+    essentially on a power-of-beta boundary into adjacent classes - the
+    decision-for-decision parity guarantee is only for beta == 2."""
+    if beta == 2.0:
+        return dur_exponent(dur)
+    dur = np.maximum(dur, 1e-12)
+    return (np.floor(np.log(dur) / math.log(beta)) + 1).astype(np.int64)
+
+
+def duration_class_jnp(dur, beta: float = 2.0):
+    """jnp twin of :func:`duration_class`."""
+    import jax.numpy as jnp
+    if beta == 2.0:
+        return dur_exponent_jnp(dur)
+    dur = jnp.maximum(dur, 1e-12)
+    return (jnp.floor(jnp.log(dur) / math.log(beta)) + 1).astype(jnp.int32)
+
+
+def hybrid_threshold(i):
+    """General-vs-category routing threshold 1/(2 sqrt(i)), vectorized."""
+    return 1.0 / (2.0 * np.sqrt(i))
+
+
+def hybrid_threshold_jnp(i):
+    """jnp twin of :func:`hybrid_threshold`."""
+    import jax.numpy as jnp
+    return 1.0 / (2.0 * jnp.sqrt(i.astype(jnp.float32)))
+
+
 def _dur_exponent(dur: float) -> int:
-    """j such that dur in [2^(j-1), 2^j)."""
-    dur = max(dur, 1e-12)
-    return int(math.floor(math.log2(dur))) + 1
+    """Scalar j such that dur in [2^(j-1), 2^j)."""
+    return int(dur_exponent(dur))
 
 
 @register("cbd")
@@ -38,8 +95,7 @@ class ClassifyByDuration(Algorithm):
         self.name = f"cbd_beta{beta:g}"
 
     def select_bin(self, arr: Arrival) -> int:
-        dur = max(arr.pdur, 1e-12)
-        cat = int(math.floor(math.log(dur) / math.log(self.beta))) + 1
+        cat = int(duration_class(arr.pdur, self.beta))
         self._cat = cat
         open_idx = self.pool.open_indices()
         same = open_idx[self.pool.tag[open_idx] == cat]
@@ -107,7 +163,7 @@ class _HybridBase(Algorithm):
         key, i, cls = self._categorize(arr)
         agg = self._agg.get(key)
         after = arr.size if agg is None else agg + arr.size
-        if self._norm(after, cls) <= 1.0 / (2.0 * math.sqrt(i)) + EPS:
+        if self._norm(after, cls) <= hybrid_threshold(i) + EPS:
             self._dest = ("G", key, cls)
             return self._ff_among_tag(arr, self._tag(("G", cls)))
         self._dest = ("C", key, cls)

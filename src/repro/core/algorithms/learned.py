@@ -4,27 +4,60 @@ variants (new, paper §VI-A), and Lifetime Alignment (binary / geometric).
 Item categories use *predicted* durations with absolute geometric ranges
 X_0 = [0,1)s, X_i = [2^(i-1), 2^i)s.  Thresholds: RCP 1/sqrt(x); PPE
 alpha/sqrt(x) with alpha a guess-and-double online estimate of the maximum
-multiplicative prediction error observed on departed items.
+multiplicative prediction error observed on departed items (the shared
+``adaptive.DepartureErrorEstimator``).
+
+The categorization functions (``geo_class`` / ``la_class`` and their jnp
+twins) are pure and shared with the batched scan
+(``core.jaxsim._replay_batch``), which replays every policy in this module
+as category-structured lanes with decision-for-decision parity.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict
 
 import numpy as np
 
 from ..types import EPS, Arrival
+from .adaptive import DepartureErrorEstimator
 from .base import Algorithm, register
+from .duration import dur_exponent, dur_exponent_jnp
 
 # bin roles (stored in pool.tag as negative numbers; category tags are >= 0)
 _GENERAL, _BASE, _LARGE = -2, -3, -4
 
+LA_BINARY_SPLIT = 7200.0   # 120 min, as deployed at Azure
+
+
+def geo_class(dur):
+    """0 if dur < 1s else i with dur in [2^(i-1), 2^i) seconds, vectorized
+    (exact at power-of-two boundaries via frexp)."""
+    return np.where(np.asarray(dur) < 1.0, 0, dur_exponent(dur))
+
+
+def geo_class_jnp(dur):
+    """jnp twin of :func:`geo_class`."""
+    import jax.numpy as jnp
+    return jnp.where(dur < 1.0, 0, dur_exponent_jnp(dur)).astype(jnp.int32)
+
+
+def la_class(dur, mode: str = "binary"):
+    """Lifetime Alignment class of a (predicted or remaining) duration."""
+    if mode == "binary":
+        return (np.asarray(dur) >= LA_BINARY_SPLIT).astype(np.int64)
+    return geo_class(dur)
+
+
+def la_class_jnp(dur, mode: str = "binary"):
+    """jnp twin of :func:`la_class`."""
+    import jax.numpy as jnp
+    if mode == "binary":
+        return (dur >= LA_BINARY_SPLIT).astype(jnp.int32)
+    return geo_class_jnp(dur)
+
 
 def _geo_cat(dur: float) -> int:
-    """0 if dur < 1s else i with dur in [2^(i-1), 2^i) seconds."""
-    if dur < 1.0:
-        return 0
-    return int(math.floor(math.log2(dur))) + 1
+    return int(geo_class(dur))
 
 
 class _RCPBase(Algorithm):
@@ -55,7 +88,9 @@ class _RCPBase(Algorithm):
         self._base_idx = -1
         # item idx -> (category, location, predicted duration)
         self._items: Dict[int, tuple] = {}
-        self._alpha = 1.0
+        # alpha == pow2_ceiling(max observed error): the guess-and-double
+        # estimate, backed by the shared departure-error estimator
+        self._estimator = DepartureErrorEstimator()
         # category tags: cat -> tag id (>= 0)
         self._cat_tag: Dict[int, int] = {}
         self._next_tag = 0
@@ -69,7 +104,8 @@ class _RCPBase(Algorithm):
 
     def _threshold(self) -> float:
         x = max(len(self._seen_cats), 1)
-        return (self._alpha if self.adaptive_alpha else 1.0) / math.sqrt(x)
+        alpha = self._estimator.pow2_alpha() if self.adaptive_alpha else 1.0
+        return alpha / np.sqrt(x)
 
     def _ff_tag(self, arr: Arrival, tag: int) -> int:
         open_idx = self.pool.open_indices()
@@ -173,11 +209,9 @@ class _RCPBase(Algorithm):
                     float(self._agg_catbins[cat].max()) < 0.5:
                 self._on[cat] = False   # category load fell low: turn OFF
         if self.adaptive_alpha and pdur is not None:
+            # guess-and-double (PPE, [14]): alpha = pow2_ceiling(max err)
             rdur = float(self.inst.departures[item] - self.inst.arrivals[item])
-            pdur = max(pdur, 1e-12)
-            err = max(rdur / pdur, pdur / rdur)
-            while self._alpha < err:    # guess-and-double (PPE, [14])
-                self._alpha *= 2.0
+            self._estimator.observe(rdur, pdur)
 
     def on_closed(self, idx: int, now: float):
         if idx == self._base_idx:
@@ -239,9 +273,7 @@ class LifetimeAlignment(Algorithm):
         self.name = f"la_{mode}"
 
     def _cat(self, dur: float) -> int:
-        if self.mode == "binary":
-            return 0 if dur < 7200.0 else 1
-        return _geo_cat(dur)
+        return int(la_class(dur, self.mode))
 
     def _best_fit(self, cand: np.ndarray, size: np.ndarray) -> int:
         feas = cand[self.pool.fits_mask(cand, size)]

@@ -3,36 +3,46 @@
 The CPU oracle (core.engine) walks a heap; on an accelerator the same replay
 becomes a scan over the precomputed event sequence (2n events: departures
 before arrivals at equal times) with a fixed pool of bin slots.  Each step is
-an O(slots x d) vector op.
+an O(lanes x slots x d) vector op.
 
-Supported policies: the score-based Any Fit family (first_fit, best_fit l1 /
-l2 / linf, mru, greedy, nrt_standard, nrt_prioritized) - exactly the family
-the serving scheduler runs on-device.  Category-structured policies (hybrid,
-RCP/PPE) stay on the host engine.
+``_replay_batch`` is the single replay engine for *every* policy family:
 
-Closed slots are reused; usage time accrues per open episode, so results
-match the paper's semantics exactly (validated against the oracle in
-tests/test_jaxsim.py).
+  * the score-based Any Fit family (``POLICIES``: first_fit, best_fit l1 /
+    l2 / linf, mru, greedy, nrt_standard, nrt_prioritized), and
+  * the category-structured families (``CATEGORY_POLICIES``): CBD / CBDT,
+    Hybrid / Reduced Hybrid (+ direct-sum), RCP / PPE (+ modified),
+    Lifetime Alignment (binary / geometric), and the adaptive switch.
 
-Two replay cores share one step semantics:
+Category policies replay in the same scan by extending the carry with
+category state - a per-slot category tag (duration x arrival-window class
+for the Hybrid variants, beta/rho class for CBD/CBDT, the GENERAL / BASE /
+LARGE roles plus geometric prediction buckets X_i for RCP/PPE) and carried
+scalars (RCP's base-bin index, PPE's guess-and-double alpha, the adaptive
+switch's running departure error) - while per-item categories, thresholds
+and error terms are pure functions of the (predicted) durations, computed
+once before the scan from the shared categorization functions in
+``core.algorithms.{duration,learned,adaptive}``.  Slot selection is then
+"feasible AND category-compatible": the same fused select with an extra
+category-mask input, so all families share one step body and one kernel.
 
-  * ``_replay`` - one lane, ``jax.vmap``-able, inline jnp scoring
-    (``_select_slot``).  ``repro.sweep`` vmaps it over a padded batch on
-    the "jnp" backend.
-  * ``_replay_batch`` - an explicit lane axis, one scan over the event
-    *index* whose per-step placement decision is a single lane-batched op:
-    the fused ``kernels.fitscore.fitscore_select_batch`` Pallas kernel on
-    the "pallas" / "pallas_interpret" backends (feasibility + policy score
-    + opening-order tie-break + free-slot selection in one VMEM-tiled pass,
-    zero host round-trips per step), or the vmapped ``_select_slot`` on
-    "jnp".
+Backends (``BACKENDS`` / ``resolve_backend``; "auto" = Pallas on TPU, jnp
+elsewhere, override with REPRO_FITSCORE_BACKEND):
 
-The backend switch (``BACKENDS`` / ``resolve_backend``; "auto" = Pallas on
-TPU, jnp elsewhere, override with REPRO_FITSCORE_BACKEND) feeds
-``simulate`` and ``repro.sweep.runner``.  Kernel and jnp paths are
-bit-identical on fp32-exact instances - the scoring constants and policy
-list are imported from ``kernels.fitscore`` so they cannot drift
-(tests/test_fitscore_select.py).
+  * "jnp" - the per-step placement decision is the vmapped inline
+    ``_select_slot``; the carry stays in compact (max_bins, d) layout.
+  * "pallas" / "pallas_interpret" - the decision is the fused
+    ``kernels.fitscore.fitscore_select_batch_padded`` kernel (feasibility +
+    policy score + category mask + opening-order tie-break + free-slot
+    selection in one VMEM-tiled pass, zero host round-trips per step).  The
+    whole carry lives in the kernel's padded (Np, dpad) layout - padded
+    once before the scan and unpadded never (outputs are per-lane scalars),
+    instead of re-padding the state every step (~25x redundant data traffic
+    at d=5).
+
+Kernel and jnp paths are bit-identical on fp32-exact instances - the
+scoring constants and policy list are imported from ``kernels.fitscore`` so
+the paths cannot drift (tests/test_fitscore_select.py,
+tests/test_sweep_categories.py).
 
 Batch padding conventions (produced by ``repro.sweep.batching``):
 
@@ -55,14 +65,45 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.fitscore import (F32_EPS, IBIG, SCORE_BIG, SCORE_NEG,
-                                SELECT_POLICIES, fitscore_select_batch)
-from .types import EPS, Instance
+                                SELECT_POLICIES, fitscore_select_batch_padded,
+                                select_pad_geometry)
+from .algorithms.adaptive import pow2_ceiling_jnp, prediction_error_jnp
+from .algorithms.departure import departure_window_jnp
+from .algorithms.duration import (dur_exponent_jnp, duration_class_jnp,
+                                  hybrid_threshold_jnp)
+from .algorithms.learned import geo_class_jnp, la_class_jnp
+from .types import Instance
 
 # Scoring semantics are shared with the Pallas kernel (kernels/fitscore.py
 # is the single definition site so the two paths cannot drift).
 POLICIES = SELECT_POLICIES
 NEG = SCORE_NEG
 BIG = SCORE_BIG
+
+# Category-structured policies replayed by the same scan (tentpole of the
+# paper's headline comparisons).  Parametric variants parse too:
+# "cbd_beta4", "cbdt_rho3600", "adaptive_2_16".
+CATEGORY_POLICIES = ("cbd", "cbdt", "hybrid", "reduced_hybrid",
+                     "hybrid_direct_sum", "reduced_hybrid_direct_sum",
+                     "rcp", "ppe", "rcp_modified", "ppe_modified",
+                     "la_binary", "la_geometric", "adaptive")
+SCAN_POLICIES = POLICIES + CATEGORY_POLICIES
+
+# Default CBDT window: 0.25 days, the paper's best fixed rho (Fig. 4/8).
+CBDT_DEFAULT_RHO = 0.25 * 86400.0
+
+# Geometric prediction buckets X_0 = [0,1)s, X_i = [2^(i-1), 2^i)s: bucket
+# 63 would need a duration of 2^62 seconds, so 64 is a safe dense bound for
+# the carried per-bucket aggregates of RCP/PPE.
+KCAT = 64
+
+# Bin-role tags carried per slot (mirrors core.algorithms.learned; category
+# tags are >= 0: the raw class for CBD/CBDT/RCP, cls / d + key for Hybrid).
+TAG_VIRGIN, TAG_GENERAL, TAG_BASE, TAG_LARGE = -1, -2, -3, -4
+TAG_NONE = -99   # matches no slot: forces "open a new bin"
+
+# RCP/PPE item locations (carried per item for departure bookkeeping).
+LOC_G, LOC_B, LOC_C, LOC_L = 0, 1, 2, 3
 
 # Event kinds in the precomputed sequence.
 ARRIVAL_KIND = 1
@@ -93,6 +134,89 @@ def grow_max_bins(max_bins: int, cap: int = MAX_BINS_CAP) -> int:
     return min(max(2 * max_bins, 1), cap)
 
 
+# ======================================================================
+# Policy specs: one name space over both families
+# ======================================================================
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Static description of how a policy replays in the scan."""
+
+    family: str                 # score | cbd | cbdt | hybrid | rcp | la |
+    #                             adaptive
+    beta: float = 2.0           # cbd duration base
+    rho: float = CBDT_DEFAULT_RHO   # cbdt departure-window width (seconds)
+    reduced: bool = False       # hybrid: duration-only categories
+    direct_sum: bool = False    # hybrid: per-max-dimension sub-instances
+    large_bins: bool = True     # rcp/ppe: dedicated bins for items > 1/2
+    adaptive_alpha: bool = False    # ppe: guess-and-double threshold
+    la_mode: str = "binary"     # lifetime alignment class structure
+    low: float = 2.0            # adaptive regime thresholds
+    high: float = 16.0
+
+
+def policy_spec(policy: str) -> PolicySpec:
+    """Parse a scan policy name (including parametric variants).  Raises
+    KeyError for unknown or malformed names."""
+    try:
+        if policy in SELECT_POLICIES:
+            return PolicySpec("score")
+        if policy == "cbd" or policy.startswith("cbd_beta"):
+            beta = float(policy[len("cbd_beta"):]) if policy != "cbd" \
+                else 2.0
+            return PolicySpec("cbd", beta=beta)
+        if policy == "cbdt" or policy.startswith("cbdt_rho"):
+            rho = float(policy[len("cbdt_rho"):]) if policy != "cbdt" \
+                else CBDT_DEFAULT_RHO
+            return PolicySpec("cbdt", rho=rho)
+        if policy in ("hybrid", "reduced_hybrid", "hybrid_direct_sum",
+                      "reduced_hybrid_direct_sum"):
+            return PolicySpec("hybrid", reduced="reduced" in policy,
+                              direct_sum="direct_sum" in policy)
+        if policy in ("rcp", "ppe", "rcp_modified", "ppe_modified"):
+            return PolicySpec("rcp", large_bins="modified" not in policy,
+                              adaptive_alpha=policy.startswith("ppe"))
+        if policy in ("la_binary", "la_geometric"):
+            return PolicySpec("la", la_mode=policy[3:])
+        if policy == "adaptive" or policy.startswith("adaptive_"):
+            if policy == "adaptive":
+                return PolicySpec("adaptive")
+            low, high = policy[len("adaptive_"):].split("_")
+            return PolicySpec("adaptive", low=float(low), high=float(high))
+    except ValueError as e:   # malformed parameter, e.g. "cbd_betax"
+        raise KeyError(f"malformed scan policy {policy!r}: {e}") from e
+    raise KeyError(f"unknown scan policy {policy!r}; known: {SCAN_POLICIES}")
+
+
+def known_policy(policy: str) -> bool:
+    """True when ``policy`` replays through ``_replay_batch``."""
+    try:
+        policy_spec(policy)
+        return True
+    except KeyError:
+        return False
+
+
+def host_algorithm(policy: str):
+    """The oracle-engine algorithm instance equivalent to a scan policy
+    (the parity reference used by tests and benchmarks)."""
+    from .algorithms import get_algorithm
+    spec = policy_spec(policy)
+    if spec.family == "score":
+        if policy.startswith("best_fit_"):
+            return get_algorithm("best_fit", norm=policy.split("_")[-1])
+        return get_algorithm(policy)
+    if spec.family == "cbd":
+        return get_algorithm("cbd", beta=spec.beta)
+    if spec.family == "cbdt":
+        return get_algorithm("cbdt", rho=spec.rho)
+    if spec.family == "la":
+        return get_algorithm("lifetime_alignment", mode=spec.la_mode)
+    if spec.family == "adaptive":
+        return get_algorithm("adaptive", low=spec.low, high=spec.high)
+    return get_algorithm(policy)
+
+
 @dataclasses.dataclass
 class JaxSimResult:
     usage_time: float
@@ -102,15 +226,21 @@ class JaxSimResult:
     max_bins: int = 0   # slot-pool size that produced this result
 
 
-def _score(policy: str, loads, alive, open_seq, access_seq, closes, size,
-           pdep, now, dmask=None):
+# ======================================================================
+# The inline jnp placement decision (the kernel's reference twin)
+# ======================================================================
+
+def _score(policy, loads, alive, open_seq, access_seq, closes, size,
+           pdep, now, dmask=None, cmask=None):
     """Lower is better; +BIG means infeasible.
 
     ``dmask`` (d,) marks real dimensions when sizes are zero-padded to a
     common d; zero-size padded dims never affect feasibility but must be
-    excluded from the best-fit residual norms.
-    """
+    excluded from the best-fit residual norms.  ``cmask`` (n_slots,)
+    restricts feasibility to category-compatible slots (None = all)."""
     feasible = jnp.all(size[None, :] <= 1.0 - loads + F32_EPS, axis=1) & alive
+    if cmask is not None:
+        feasible = feasible & cmask
     if policy == "first_fit":
         s = open_seq.astype(jnp.float32)
     elif policy == "mru":
@@ -143,7 +273,7 @@ def _score(policy: str, loads, alive, open_seq, access_seq, closes, size,
 
 
 def _select_slot(policy, loads, counts, alive, open_seq, access_seq, closes,
-                 size, pdep, now, dmask):
+                 size, pdep, now, dmask, cmask=None):
     """The fused placement decision, inline-jnp flavor: min score with ties
     broken by opening order (the oracle iterates open bins in opening order
     and takes the first), falling back to the smallest closed/virgin slot.
@@ -151,7 +281,7 @@ def _select_slot(policy, loads, counts, alive, open_seq, access_seq, closes,
     (``kernels.fitscore.fitscore_select_batch``) reproduces bit-for-bit."""
     n_slots = loads.shape[0]
     s = _score(policy, loads, alive, open_seq, access_seq, closes, size,
-               pdep, now, dmask)
+               pdep, now, dmask, cmask)
     smin = jnp.min(s)
     tie = s <= smin
     best = jnp.argmin(jnp.where(tie, open_seq, jnp.int32(IBIG)))
@@ -163,110 +293,195 @@ def _select_slot(policy, loads, counts, alive, open_seq, access_seq, closes,
     return b, found, no_free
 
 
-def _replay(sizes, times, kinds, items, pdeps, dmask, *, policy: str,
-            max_bins: int):
-    """One instance's event replay; pure function of its array arguments,
-    safe to ``jax.vmap`` over a leading batch axis of every argument."""
-    n_slots = max_bins
-    d = sizes.shape[1]
+# ======================================================================
+# Category machinery: per-item constants + carried state per family
+# ======================================================================
 
-    def step(carry, ev):
-        (loads, counts, alive, open_seq, access_seq, closes, open_time,
-         placements, usage, seq, opened, overflow) = carry
-        t, kind, j = ev
-        j = j.astype(jnp.int32)
-        size = sizes[j]
-        is_arr = kind == ARRIVAL_KIND
-        is_pad = kind == PAD_KIND
-
-        # ---- departure branch data
-        b_dep = placements[j]
-        loads_dep = loads.at[b_dep].add(-size)
-        counts_dep = counts.at[b_dep].add(-1)
-        closing = counts_dep[b_dep] == 0
-        usage_dep = usage + jnp.where(closing, t - open_time[b_dep], 0.0)
-        alive_dep = alive.at[b_dep].set(jnp.where(closing, False,
-                                                  alive[b_dep]))
-        loads_dep = loads_dep.at[b_dep].set(
-            jnp.where(closing, jnp.zeros(d), loads_dep[b_dep]))
-        closes_dep = closes.at[b_dep].set(
-            jnp.where(closing, NEG, closes[b_dep]))
-
-        # ---- arrival branch data
-        b, found, no_free = _select_slot(policy, loads, counts, alive,
-                                         open_seq, access_seq, closes, size,
-                                         pdeps[j], t, dmask)
-        overflow_arr = overflow | (~found & no_free)
-        loads_arr = loads.at[b].add(size)
-        counts_arr = counts.at[b].add(1)
-        alive_arr = alive.at[b].set(True)
-        open_seq_arr = open_seq.at[b].set(
-            jnp.where(found, open_seq[b], seq))
-        open_time_arr = open_time.at[b].set(
-            jnp.where(found, open_time[b], t))
-        access_arr = access_seq.at[b].set(seq)
-        closes_arr = closes.at[b].set(
-            jnp.maximum(jnp.where(found, closes[b], NEG),
-                        jnp.maximum(pdeps[j], t)))
-        placements_arr = placements.at[j].set(b)
-        opened_arr = opened + jnp.where(found, 0, 1)
-
-        pick = lambda a_val, d_val: jax.tree.map(
-            lambda x, y: jnp.where(is_arr, x, y), a_val, d_val)
-        new = pick(
-            (loads_arr, counts_arr, alive_arr, open_seq_arr, access_arr,
-             closes_arr, open_time_arr, placements_arr, usage, seq + 1,
-             opened_arr, overflow_arr),
-            (loads_dep, counts_dep, alive_dep, open_seq, access_seq,
-             closes_dep, open_time, placements, usage_dep, seq, opened,
-             overflow))
-        # padded events are no-ops: the carry passes through untouched
-        carry = jax.tree.map(lambda new_x, old_x: jnp.where(is_pad, old_x,
-                                                            new_x),
-                             new, carry)
-        return carry, None
-
-    n = sizes.shape[0]
-    init = (jnp.zeros((n_slots, d)), jnp.zeros(n_slots, jnp.int32),
-            jnp.zeros(n_slots, bool), jnp.zeros(n_slots, jnp.int32),
-            jnp.full(n_slots, -1, jnp.int32), jnp.full(n_slots, NEG),
-            jnp.zeros(n_slots), jnp.full(n, -1, jnp.int32), 0.0,
-            jnp.int32(0), jnp.int32(0), jnp.bool_(False))
-    carry, _ = jax.lax.scan(step, init, (times, kinds, items))
-    return carry[8], carry[10], carry[7], carry[11]
+def _dense_key_ids(i, cls, win):
+    """One lane's dense hybrid key ids: key_id[j] = first item index whose
+    (i, cls, win) triple equals item j's - a valid index into an
+    (n_max,)-sized aggregate table.  O(n log n) sort + segment-min (the
+    pairwise-equality broadcast would be O(n^2) memory, which OOMs on
+    real-trace lane sizes)."""
+    n = i.shape[0]
+    order = jnp.lexsort((win, cls, i))
+    si, sc, sw = i[order], cls[order], win[order]
+    new = jnp.concatenate([jnp.ones(1, bool), (si[1:] != si[:-1]) |
+                           (sc[1:] != sc[:-1]) | (sw[1:] != sw[:-1])])
+    grp = jnp.cumsum(new) - 1                   # contiguous group per key
+    first = jax.ops.segment_min(order, grp, num_segments=n)
+    return jnp.zeros(n, jnp.int32).at[order].set(
+        first[grp].astype(jnp.int32))
 
 
-def _replay_batch(sizes, times, kinds, items, pdeps, dmask, *, policy: str,
-                  max_bins: int, backend: str = "jnp"):
+def _category_setup(spec, sizes, pdeps, dmask, arrivals, rdeps, n_items,
+                    times, kinds, items, Np):
+    """Per-item category constants, initial carried category state, and
+    extra per-event scan inputs for one policy family.
+
+    All pure jnp on the lane-batched arrays: categories, thresholds and
+    error terms are functions of the (predicted) durations only, so they
+    are computed once here and the scan carries just the placement-dependent
+    state (slot tags, aggregates, ON flags, alpha / err scalars)."""
+    L, n_max, d = sizes.shape
+    f32, i32 = jnp.float32, jnp.int32
+    if spec.family == "score":
+        return {}, {}, ()
+    assert arrivals is not None and rdeps is not None and n_items is not None, \
+        f"{spec.family} lanes need arrivals/rdeps/n_items"
+    pdur = pdeps - arrivals
+    tag0 = jnp.full((L, Np), TAG_VIRGIN, i32)
+
+    if spec.family == "cbd":
+        return ({"cat": duration_class_jnp(pdur, spec.beta)},
+                {"tag": tag0}, ())
+    if spec.family == "cbdt":
+        return ({"cat": departure_window_jnp(pdeps, spec.rho)},
+                {"tag": tag0}, ())
+
+    if spec.family == "hybrid":
+        rdur = rdeps - arrivals
+        real = jnp.arange(n_max)[None, :] < n_items[:, None]
+        min_dur = jnp.min(jnp.where(real, rdur, jnp.inf), axis=1)
+        z = dur_exponent_jnp(min_dur)                    # (L,)
+        jexp = dur_exponent_jnp(pdur)                    # (L, n_max)
+        i = jnp.maximum(jexp - z[:, None] + 1, 1)        # scaled index >= 1
+        thr = hybrid_threshold_jnp(i).astype(f32)
+        cls = jnp.argmax(sizes, axis=2).astype(i32) if spec.direct_sum \
+            else jnp.zeros((L, n_max), i32)
+        win = jnp.zeros((L, n_max), i32) if spec.reduced else \
+            jnp.floor(arrivals / jnp.ldexp(jnp.float32(1.0),
+                                           jexp)).astype(i32)
+        # dense per-lane key ids: a key (cls, i, window) is identified by
+        # the first item index carrying it, so aggregates index a fixed
+        # (n_max,)-sized table without host round-trips
+        key = jax.vmap(_dense_key_ids)(i, cls, win)
+        return ({"key": key, "thr": thr, "cls": cls},
+                {"tag": tag0, "agg": jnp.zeros((L, n_max, d), f32),
+                 "ingen": jnp.zeros((L, n_max), bool)}, ())
+
+    if spec.family == "rcp":
+        rdur = rdeps - arrivals
+        cat = jnp.clip(geo_class_jnp(jnp.maximum(pdur, 0.0)), 0, KCAT - 1)
+        large = jnp.max(sizes, axis=2) > 0.5
+        p2err = pow2_ceiling_jnp(
+            prediction_error_jnp(rdur, pdur)).astype(f32)
+        # x in the 1/sqrt(x) threshold: running count of distinct categories
+        # over the arrival events - precomputable because categories are
+        # pure functions of the predicted durations
+        E = times.shape[1]
+        is_arr = kinds == ARRIVAL_KIND
+        ev_cat = jnp.take_along_axis(cat, items.astype(i32), axis=1)
+        eidx = jnp.arange(E, dtype=i32)
+        hot = (ev_cat[:, :, None] == jnp.arange(KCAT, dtype=i32)) & \
+            is_arr[:, :, None]
+        first = jnp.min(jnp.where(hot, eidx[None, :, None], E), axis=1)
+        newflag = is_arr & (eidx[None, :] ==
+                            jnp.take_along_axis(first, ev_cat, axis=1))
+        xcount = jnp.cumsum(newflag.astype(i32), axis=1)
+        return ({"cat": cat, "large": large, "p2err": p2err},
+                {"tag": tag0,
+                 "agg_gen": jnp.zeros((L, KCAT, d), f32),
+                 "agg_cat": jnp.zeros((L, KCAT, d), f32),
+                 "agg_bcat": jnp.zeros((L, KCAT, d), f32),
+                 "agg_base": jnp.zeros((L, d), f32),
+                 "on": jnp.zeros((L, KCAT), bool),
+                 "base": jnp.full((L,), -1, i32),
+                 "alpha": jnp.ones((L,), f32),
+                 "loc": jnp.zeros((L, n_max), i32)},
+                (xcount,))
+
+    if spec.family == "la":
+        return ({"cat": la_class_jnp(jnp.maximum(pdur, 0.0), spec.la_mode)},
+                {}, ())
+
+    assert spec.family == "adaptive", spec.family
+    rdur = rdeps - arrivals
+    return ({"errmax": prediction_error_jnp(rdur, pdur).astype(f32)},
+            {"err": jnp.ones((L,), f32)}, ())
+
+
+# ======================================================================
+# The single replay engine
+# ======================================================================
+
+def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
+                  rdeps=None, n_items=None, *, policy: str, max_bins: int,
+                  backend: str = "jnp"):
     """``L`` lanes' event replays in lockstep: one scan over the event
     *index* whose step processes every lane at once, so the arrival scoring
     is a single (L, slots, d) op - on TPU the fused
-    ``kernels.fitscore.fitscore_select_batch`` Pallas kernel, with zero host
-    round-trips per step.
+    ``kernels.fitscore.fitscore_select_batch_padded`` Pallas kernel, with
+    zero host round-trips per step.
 
-    Same argument convention as ``_replay`` with a leading lane axis on
-    every array (``dmask`` may be None); same return tuple with a leading
-    lane axis.  ``backend="jnp"`` selects with the inline vmapped
-    ``_select_slot`` (bit-identical to the vmapped ``_replay`` path);
-    "pallas"/"pallas_interpret" run the kernel natively / in interpret mode.
+    Every array carries a leading lane axis: sizes (L, n_max, d); times /
+    kinds / items (L, 2 n_max); pdeps (L, n_max) *predicted* departures;
+    ``dmask`` (L, d) real-dimension mask or None.  Category policies
+    additionally need ``arrivals`` / ``rdeps`` (real departures) (L, n_max)
+    and ``n_items`` (L,) to derive per-item categories, thresholds and
+    departure errors (see ``_category_setup``).
+
+    Returns (usage (L,), opened (L,), placements (L, n_max), overflow (L,)).
+
+    ``backend="jnp"`` selects with the inline vmapped ``_select_slot`` on a
+    compact (max_bins, d) carry; "pallas"/"pallas_interpret" run the kernel
+    natively / in interpret mode with the carry held permanently in the
+    padded (Np, dpad) kernel layout (padded once here, not per step).
     """
+    spec = policy_spec(policy)
     L, n_max, d = sizes.shape
-    n_slots = max_bins
+    f32, i32 = jnp.float32, jnp.int32
+    kernel_layout = backend != "jnp"
+    if kernel_layout:
+        Np, dpad, _, _ = select_pad_geometry(max_bins, d)
+    else:
+        Np, dpad = max_bins, d
     lanes = jnp.arange(L)
-    dmask_full = jnp.ones((L, d)) if dmask is None else dmask
+
+    # pad once: item sizes and the dim mask live in the select's dpad
+    # layout for the whole scan
+    sizes_p = jnp.asarray(sizes, f32) if dpad == d else \
+        jnp.zeros((L, n_max, dpad), f32).at[:, :, :d].set(sizes)
+    dm = jnp.ones((L, d), f32) if dmask is None else jnp.asarray(dmask, f32)
+    dmask_p = dm if dpad == d else \
+        jnp.zeros((L, dpad), f32).at[:, :d].set(dm)
+
+    consts, cat0, xs_extra = _category_setup(
+        spec, sizes, pdeps, dmask, arrivals, rdeps, n_items, times, kinds,
+        items, Np)
+
+    def do_select(base, loads, counts, alive, open_seq, access_seq, closes,
+                  size, pdep_j, t, cmask=None):
+        if not kernel_layout:
+            return jax.vmap(partial(_select_slot, base))(
+                loads, counts, alive, open_seq, access_seq, closes, size,
+                pdep_j, t, dmask_p, cmask)
+        return fitscore_select_batch_padded(
+            loads, counts, alive, open_seq, access_seq, closes, size,
+            pdep_j, t, dmask_p, cmask, policy=base, n=max_bins,
+            interpret=(backend == "pallas_interpret"))
+
+    def pick(cond, a_val, d_val):
+        return jax.tree.map(
+            lambda x, y: jnp.where(
+                cond.reshape(cond.shape + (1,) * (x.ndim - 1)), x, y),
+            a_val, d_val)
 
     def step(carry, ev):
+        core, cat = carry
         (loads, counts, alive, open_seq, access_seq, closes, open_time,
-         placements, usage, seq, opened, overflow) = carry
-        t, kind, j = ev                       # (L,) each
-        j = j.astype(jnp.int32)
-        size = jnp.take_along_axis(sizes, j[:, None, None], axis=1)[:, 0]
-        pdep_j = jnp.take_along_axis(pdeps, j[:, None], axis=1)[:, 0]
+         placements, usage, seq, opened, overflow) = core
+        t, kind = ev[0], ev[1]
+        j = ev[2].astype(i32)
+        g = lambda a: jnp.take_along_axis(a, j[:, None], axis=1)[:, 0]
+        size = jnp.take_along_axis(sizes_p, j[:, None, None], axis=1)[:, 0]
+        size_d = size[:, :d]
+        pdep_j = g(pdeps)
         is_arr = kind == ARRIVAL_KIND
         is_pad = kind == PAD_KIND
 
-        # ---- departure branch data
-        b_dep = jnp.take_along_axis(placements, j[:, None], axis=1)[:, 0]
+        # ---- departure branch: shared bin bookkeeping
+        b_dep = g(placements)
         loads_dep = loads.at[lanes, b_dep].add(-size)
         counts_dep = counts.at[lanes, b_dep].add(-1)
         closing = counts_dep[lanes, b_dep] == 0
@@ -275,22 +490,176 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, *, policy: str,
         alive_dep = alive.at[lanes, b_dep].set(
             jnp.where(closing, False, alive[lanes, b_dep]))
         loads_dep = loads_dep.at[lanes, b_dep].set(
-            jnp.where(closing[:, None], jnp.zeros((L, d)),
+            jnp.where(closing[:, None], jnp.zeros((L, dpad)),
                       loads_dep[lanes, b_dep]))
         closes_dep = closes.at[lanes, b_dep].set(
             jnp.where(closing, NEG, closes[lanes, b_dep]))
 
-        # ---- arrival branch data
-        if backend == "jnp":
-            b, found, no_free = jax.vmap(partial(_select_slot, policy))(
-                loads, counts, alive, open_seq, access_seq, closes, size,
-                pdep_j, t, dmask_full)
-        else:
-            b, found, no_free = fitscore_select_batch(
-                loads, counts, alive, open_seq, access_seq, closes, size,
-                pdep_j, t, dmask_full, policy=policy,
-                interpret=(backend == "pallas_interpret"))
-        b = b.astype(jnp.int32)
+        # ---- the placement decision + category-state deltas
+        cat_arr = dict(cat)   # category state if this event is an arrival
+        cat_dep = dict(cat)   # ... if it is a departure
+        sel = lambda base, cmask=None: do_select(
+            base, loads, counts, alive, open_seq, access_seq, closes, size,
+            pdep_j, t, cmask)
+
+        if spec.family == "score":
+            b, found, no_free = sel(policy)
+
+        elif spec.family in ("cbd", "cbdt"):
+            # First Fit within the item's duration/departure class
+            catj = g(consts["cat"])
+            b, found, no_free = sel("first_fit",
+                                    cat["tag"] == catj[:, None])
+            cat_arr["tag"] = cat["tag"].at[lanes, b].set(
+                jnp.where(found, cat["tag"][lanes, b], catj))
+
+        elif spec.family == "hybrid":
+            keyj, thrj, clsj = g(consts["key"]), g(consts["thr"]), \
+                g(consts["cls"])
+            after = cat["agg"][lanes, keyj] + size_d
+            norm = jnp.take_along_axis(after, clsj[:, None], axis=1)[:, 0] \
+                if spec.direct_sum else jnp.max(after, axis=1)
+            is_gen = norm <= thrj + F32_EPS
+            wanted = jnp.where(is_gen, clsj, d + keyj)
+            b, found, no_free = sel("first_fit",
+                                    cat["tag"] == wanted[:, None])
+            cat_arr["tag"] = cat["tag"].at[lanes, b].set(
+                jnp.where(found, cat["tag"][lanes, b], wanted))
+            cat_arr["agg"] = cat["agg"].at[lanes, keyj].add(
+                jnp.where(is_gen[:, None], size_d, 0.0))
+            cat_arr["ingen"] = cat["ingen"].at[lanes, j].set(is_gen)
+            wasg = g(cat["ingen"])
+            cat_dep["agg"] = cat["agg"].at[lanes, keyj].set(
+                jnp.maximum(cat["agg"][lanes, keyj] -
+                            jnp.where(wasg[:, None], size_d, 0.0), 0.0))
+
+        elif spec.family == "rcp":
+            catj, largej = g(consts["cat"]), g(consts["large"])
+            x = jnp.maximum(ev[3], 1).astype(f32)    # distinct cats so far
+            coef = cat["alpha"] if spec.adaptive_alpha else 1.0
+            thr = coef / jnp.sqrt(x)
+            fits_gen = jnp.max(cat["agg_gen"][lanes, catj] + size_d,
+                               axis=1) <= thr + F32_EPS
+            has_base = cat["base"] >= 0
+            base_loads = loads[lanes, jnp.maximum(cat["base"], 0)]
+            base_fits = jnp.where(
+                has_base,
+                jnp.all(size <= 1.0 - base_loads + F32_EPS, axis=1), True)
+            is_on = cat["on"][lanes, catj]
+            d_large = largej if spec.large_bins else jnp.zeros(L, bool)
+            d_gen = ~d_large & fits_gen
+            d_cat = ~d_large & ~fits_gen & is_on
+            d_base = ~d_large & ~fits_gen & ~is_on & base_fits
+            d_catf = ~d_large & ~fits_gen & ~is_on & ~base_fits  # "C!"
+            wanted = jnp.where(
+                d_gen, TAG_GENERAL,
+                jnp.where(d_cat, catj,
+                          jnp.where(d_base & has_base, TAG_BASE, TAG_NONE)))
+            b, found, no_free = sel("first_fit",
+                                    cat["tag"] == wanted[:, None])
+            open_tag = jnp.where(
+                d_large, TAG_LARGE,
+                jnp.where(d_gen, TAG_GENERAL,
+                          jnp.where(d_base, TAG_BASE, catj)))
+            tag_a = cat["tag"].at[lanes, b].set(
+                jnp.where(found, cat["tag"][lanes, b], open_tag))
+            new_base = d_base & ~has_base
+            base_a = jnp.where(new_base, b, cat["base"])
+            agg_base_a = jnp.where(new_base[:, None], 0.0,
+                                   cat["agg_base"]) + \
+                jnp.where(d_base[:, None], size_d, 0.0)
+            agg_bcat_a = jnp.where(new_base[:, None, None], 0.0,
+                                   cat["agg_bcat"]).at[lanes, catj].add(
+                jnp.where(d_base[:, None], size_d, 0.0))
+            agg_gen_a = cat["agg_gen"].at[lanes, catj].add(
+                jnp.where(d_gen[:, None], size_d, 0.0))
+            agg_cat_a = cat["agg_cat"].at[lanes, catj].add(
+                jnp.where((d_cat | d_catf)[:, None], size_d, 0.0))
+            on_a = cat["on"].at[lanes, catj].set(
+                cat["on"][lanes, catj] | d_catf)
+            loc_a = cat["loc"].at[lanes, j].set(
+                jnp.where(d_gen, LOC_G,
+                          jnp.where(d_base, LOC_B,
+                                    jnp.where(d_large, LOC_L, LOC_C))))
+            # base conversion (paper §VI-A): base exceeded 1/2 -> becomes a
+            # category bin of its dominant member category, which turns ON
+            conv = d_base & (jnp.max(agg_base_a, axis=1) > 0.5)
+            dom = jnp.argmax(jnp.max(agg_bcat_a, axis=2), axis=1) \
+                .astype(i32)
+            tag_a = tag_a.at[lanes, b].set(
+                jnp.where(conv, dom, tag_a[lanes, b]))
+            on_a = on_a.at[lanes, dom].set(on_a[lanes, dom] | conv)
+            agg_cat_a = jnp.where(conv[:, None, None],
+                                  agg_cat_a + agg_bcat_a, agg_cat_a)
+            loc_a = jnp.where(conv[:, None] & (loc_a == LOC_B), LOC_C,
+                              loc_a)
+            cat_arr.update(
+                tag=tag_a, on=on_a, loc=loc_a, agg_gen=agg_gen_a,
+                agg_cat=agg_cat_a,
+                agg_base=jnp.where(conv[:, None], 0.0, agg_base_a),
+                agg_bcat=jnp.where(conv[:, None, None], 0.0, agg_bcat_a),
+                base=jnp.where(conv, -1, base_a))
+            # departure branch: per-location aggregate decrements, category
+            # turn-OFF below 1/2, alpha guess-and-double, base-close reset
+            locd = g(cat["loc"])
+            sz_g = jnp.where((locd == LOC_G)[:, None], size_d, 0.0)
+            sz_b = jnp.where((locd == LOC_B)[:, None], size_d, 0.0)
+            sz_c = jnp.where((locd == LOC_C)[:, None], size_d, 0.0)
+            agg_gen_d = cat["agg_gen"].at[lanes, catj].set(
+                jnp.maximum(cat["agg_gen"][lanes, catj] - sz_g, 0.0))
+            new_cat = jnp.maximum(cat["agg_cat"][lanes, catj] - sz_c, 0.0)
+            agg_cat_d = cat["agg_cat"].at[lanes, catj].set(new_cat)
+            turn_off = (locd == LOC_C) & cat["on"][lanes, catj] & \
+                (jnp.max(new_cat, axis=1) < 0.5)
+            base_closed = closing & has_base & (b_dep == cat["base"])
+            cat_dep.update(
+                agg_gen=agg_gen_d, agg_cat=agg_cat_d,
+                on=cat["on"].at[lanes, catj].set(
+                    cat["on"][lanes, catj] & ~turn_off),
+                agg_base=jnp.where(
+                    base_closed[:, None], 0.0,
+                    jnp.maximum(cat["agg_base"] - sz_b, 0.0)),
+                agg_bcat=jnp.where(
+                    base_closed[:, None, None], 0.0,
+                    cat["agg_bcat"].at[lanes, catj].set(
+                        jnp.maximum(cat["agg_bcat"][lanes, catj] - sz_b,
+                                    0.0))),
+                base=jnp.where(base_closed, -1, cat["base"]),
+                alpha=jnp.maximum(cat["alpha"], g(consts["p2err"]))
+                if spec.adaptive_alpha else cat["alpha"])
+
+        elif spec.family == "la":
+            # Best Fit (l_inf) within the item's lifetime class; bins are
+            # classed by predicted remaining usage (carried ``closes``
+            # clamped to now); class-0 items fill leftover capacity
+            # anywhere, others fall back to foreign-class bins
+            icat = g(consts["cat"])
+            remt = jnp.maximum(closes, t[:, None]) - t[:, None]
+            bincat = la_class_jnp(remt, spec.la_mode)
+            same = bincat == icat[:, None]
+            short = (icat == 0)[:, None]
+            ra = sel("best_fit_linf", jnp.where(short, True, same))
+            rb = sel("best_fit_linf", jnp.where(short, False, ~same))
+            found = ra[1] | rb[1]
+            b = jnp.where(ra[1], ra[0], rb[0]).astype(i32)
+            no_free = ra[2]
+
+        else:   # adaptive: regime-switch between three Any Fit policies on
+            # the carried running departure error
+            err = cat["err"]
+            k = jnp.where(err < spec.low, 0,
+                          jnp.where(err < spec.high, 1, 2))
+            r0, r1, r2 = sel("nrt_prioritized"), sel("greedy"), \
+                sel("first_fit")
+            b = jnp.where(k == 0, r0[0],
+                          jnp.where(k == 1, r1[0], r2[0])).astype(i32)
+            found = jnp.where(k == 0, r0[1],
+                              jnp.where(k == 1, r1[1], r2[1]))
+            no_free = r0[2]
+            cat_dep["err"] = jnp.maximum(err, g(consts["errmax"]))
+
+        # ---- arrival branch: shared bin bookkeeping
+        b = b.astype(i32)
         overflow_arr = overflow | (~found & no_free)
         loads_arr = loads.at[lanes, b].add(size)
         counts_arr = counts.at[lanes, b].add(1)
@@ -306,48 +675,39 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, *, policy: str,
         placements_arr = placements.at[lanes, j].set(b)
         opened_arr = opened + jnp.where(found, 0, 1)
 
-        def pick(cond, a_val, d_val):
-            return jax.tree.map(
-                lambda x, y: jnp.where(
-                    cond.reshape(cond.shape + (1,) * (x.ndim - 1)), x, y),
-                a_val, d_val)
         new = pick(
             is_arr,
-            (loads_arr, counts_arr, alive_arr, open_seq_arr, access_arr,
-             closes_arr, open_time_arr, placements_arr, usage, seq + 1,
-             opened_arr, overflow_arr),
-            (loads_dep, counts_dep, alive_dep, open_seq, access_seq,
-             closes_dep, open_time, placements, usage_dep, seq, opened,
-             overflow))
+            ((loads_arr, counts_arr, alive_arr, open_seq_arr, access_arr,
+              closes_arr, open_time_arr, placements_arr, usage, seq + 1,
+              opened_arr, overflow_arr), cat_arr),
+            ((loads_dep, counts_dep, alive_dep, open_seq, access_seq,
+              closes_dep, open_time, placements, usage_dep, seq, opened,
+              overflow), cat_dep))
         # padded events are no-ops: the carry passes through untouched
         carry = pick(is_pad, carry, new)
         return carry, None
 
-    init = (jnp.zeros((L, n_slots, d)), jnp.zeros((L, n_slots), jnp.int32),
-            jnp.zeros((L, n_slots), bool),
-            jnp.zeros((L, n_slots), jnp.int32),
-            jnp.full((L, n_slots), -1, jnp.int32),
-            jnp.full((L, n_slots), NEG), jnp.zeros((L, n_slots)),
-            jnp.full((L, n_max), -1, jnp.int32), jnp.zeros(L),
-            jnp.zeros(L, jnp.int32), jnp.zeros(L, jnp.int32),
-            jnp.zeros(L, bool))
-    xs = tuple(jnp.swapaxes(a, 0, 1) for a in (times, kinds, items))
-    carry, _ = jax.lax.scan(step, init, xs)
-    return carry[8], carry[10], carry[7], carry[11]
-
-
-@partial(jax.jit, static_argnames=("policy", "max_bins"))
-def _simulate(sizes, times, kinds, items, pdeps, *, policy: str,
-              max_bins: int):
-    return _replay(sizes, times, kinds, items, pdeps, None,
-                   policy=policy, max_bins=max_bins)
+    core0 = (jnp.zeros((L, Np, dpad)), jnp.zeros((L, Np), i32),
+             jnp.zeros((L, Np), bool),
+             jnp.zeros((L, Np), i32),
+             jnp.full((L, Np), -1, i32),
+             jnp.full((L, Np), NEG), jnp.zeros((L, Np)),
+             jnp.full((L, n_max), -1, i32), jnp.zeros(L),
+             jnp.zeros(L, i32), jnp.zeros(L, i32),
+             jnp.zeros(L, bool))
+    xs = tuple(jnp.swapaxes(a, 0, 1)
+               for a in (times, kinds, items) + xs_extra)
+    (core, _cat), _ = jax.lax.scan(step, (core0, cat0), xs)
+    return core[8], core[10], core[7], core[11]
 
 
 @partial(jax.jit, static_argnames=("policy", "max_bins", "backend"))
-def _simulate_kernel(sizes, times, kinds, items, pdeps, *, policy: str,
-                     max_bins: int, backend: str):
+def _simulate_one(sizes, times, kinds, items, pdeps, arrivals, rdeps, *,
+                  policy: str, max_bins: int, backend: str):
+    n1 = jnp.full((1,), sizes.shape[0], jnp.int32)
     u, o, p, ov = _replay_batch(sizes[None], times[None], kinds[None],
                                 items[None], pdeps[None], None,
+                                arrivals[None], rdeps[None], n1,
                                 policy=policy, max_bins=max_bins,
                                 backend=backend)
     return u[0], o[0], p[0], ov[0]
@@ -371,29 +731,25 @@ def simulate(inst: Instance, policy: str = "first_fit",
              max_bins: int = 256, auto_grow: bool = True,
              max_bins_cap: int = MAX_BINS_CAP,
              backend: Optional[str] = None) -> JaxSimResult:
-    """Replay one instance.  If the slot pool overflows and ``auto_grow`` is
-    set, retries with a doubled ``max_bins`` (up to ``max_bins_cap``) instead
-    of returning garbage - the same escalation ladder the batched sweep
-    runner applies per lane.  ``backend`` picks the scoring engine (see
-    ``BACKENDS``); the default "auto" resolves to the Pallas kernel on TPU
-    and the inline jnp scan step elsewhere."""
-    assert policy in POLICIES, policy
+    """Replay one instance (any ``SCAN_POLICIES`` policy).  If the slot pool
+    overflows and ``auto_grow`` is set, retries with a doubled ``max_bins``
+    (up to ``max_bins_cap``) instead of returning garbage - the same
+    escalation ladder the batched sweep runner applies per lane.
+    ``backend`` picks the scoring engine (see ``BACKENDS``); the default
+    "auto" resolves to the Pallas kernel on TPU and the inline jnp scan step
+    elsewhere."""
+    assert known_policy(policy), \
+        f"{policy!r} is not a scan policy; known: {SCAN_POLICIES}"
     backend = resolve_backend(backend)
     pdeps = inst.departures if predicted_durations is None \
         else inst.arrivals + predicted_durations
     times, kinds, items = event_sequence(inst)
-    sizes_j, times_j = jnp.asarray(inst.sizes), jnp.asarray(times)
-    kinds_j, items_j = jnp.asarray(kinds), jnp.asarray(items)
-    pdeps_j = jnp.asarray(pdeps)
+    args = tuple(jnp.asarray(a) for a in
+                 (inst.sizes, times, kinds, items, pdeps, inst.arrivals,
+                  inst.departures))
     while True:
-        if backend == "jnp":
-            usage, opened, placements, overflow = _simulate(
-                sizes_j, times_j, kinds_j, items_j, pdeps_j,
-                policy=policy, max_bins=max_bins)
-        else:
-            usage, opened, placements, overflow = _simulate_kernel(
-                sizes_j, times_j, kinds_j, items_j, pdeps_j,
-                policy=policy, max_bins=max_bins, backend=backend)
+        usage, opened, placements, overflow = _simulate_one(
+            *args, policy=policy, max_bins=max_bins, backend=backend)
         if not bool(overflow) or not auto_grow or max_bins >= max_bins_cap:
             break
         max_bins = grow_max_bins(max_bins, max_bins_cap)

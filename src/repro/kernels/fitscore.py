@@ -19,9 +19,21 @@ VMEM tiling.  Two kernels live here:
     lexicographic running argmin, the two-stage case-(a)/case-(b) select of
     ``nrt_prioritized``, and first-free-slot selection - one VMEM-tiled pass
     over a ``(lanes, bin-tiles)`` grid that emits the chosen slot per lane
-    plus ``found`` / ``no_free`` flags.  ``core.jaxsim._replay_batch`` calls
-    it once per event-scan step, so a whole sweep batch replays with zero
-    host round-trips.
+    plus ``found`` / ``no_free`` flags.
+
+    The optional *category mask* operand (``cmask``, (L, N) int32; 1 =
+    eligible slot) restricts feasibility to category-compatible slots -
+    how ``core.jaxsim`` replays the category-structured policy families
+    (CBD/CBDT, Hybrid, RCP/PPE, Lifetime Alignment): their class-restricted
+    First Fit / Best Fit stages are this same kernel with a mask computed
+    from the carried per-slot category tags.
+
+    ``fitscore_select_batch_padded`` is the hot-loop entry: the same
+    decision for state already held in the kernel's padded (Np, dpad)
+    layout (``select_pad_geometry``).  ``core.jaxsim._replay_batch`` keeps
+    its whole scan carry in that layout and calls it once per event-scan
+    step, so a whole sweep batch replays with zero host round-trips AND
+    zero per-step re-padding (~25x redundant data traffic at d=5 before).
 
 Constants ``SCORE_BIG`` / ``SCORE_NEG`` / ``F32_EPS`` / ``IBIG`` /
 ``SELECT_POLICIES`` are the single source of truth for the scoring
@@ -153,10 +165,19 @@ def fitscore(remaining, alive, item, open_seq=None, *, norm: str = "linf",
 # ======================================================================
 
 def _select_kernel(loads_ref, counts_ref, alive_ref, oseq_ref, aseq_ref,
-                   closes_ref, size_ref, dmask_ref, pdep_ref, now_ref,
-                   out_ref, fbest, ibest, *, policy: str, bn: int, nb: int,
-                   n: int):
+                   closes_ref, size_ref, dmask_ref, cmask_ref, pdep_ref,
+                   now_ref, out_ref, fbest, ibest, *, policy: str, bn: int,
+                   nb: int, n: int):
     """One (lane, bin-tile) grid step of the fused placement decision.
+
+    ``cmask_ref`` (1, bn) int32 is the *category mask*: 1 marks slots the
+    policy's category structure allows for this arrival (same-tag bins for
+    CBD/CBDT/Hybrid/RCP lanes, same-lifetime-class bins for Lifetime
+    Alignment; all-ones for the plain score policies).  It is folded into
+    feasibility before scoring, so a lane with no category-compatible
+    feasible bin reports ``found=False`` and falls through to the free-slot
+    stage - exactly the host classes' "open a new bin of my category"
+    contract.
 
     SMEM scratch layout (running state for the current lane; grid iterates
     tiles innermost so it is reset at tile 0 and emitted at tile nb-1):
@@ -192,9 +213,10 @@ def _select_kernel(loads_ref, counts_ref, alive_ref, oseq_ref, aseq_ref,
     pdep = pdep_ref[0, 0]
     now = now_ref[0, 0]
 
-    # feasibility - the exact jnp expression of core.jaxsim._score
+    # feasibility - the exact jnp expression of core.jaxsim._score,
+    # restricted to category-compatible slots
     feasible = jnp.all(size[:, None, :] <= 1.0 - loads + F32_EPS,
-                       axis=2) & alive            # (1, bn)
+                       axis=2) & alive & (cmask_ref[...] > 0)   # (1, bn)
 
     if policy == "first_fit":
         s = oseq.astype(jnp.float32)
@@ -259,41 +281,41 @@ def _select_kernel(loads_ref, counts_ref, alive_ref, oseq_ref, aseq_ref,
         out_ref[b, 2] = no_free.astype(jnp.int32)
 
 
-def fitscore_select_batch(loads, counts, alive, open_seq, access_seq, closes,
-                          size, pdep, now, dmask, *, policy: str,
-                          bn: int = 256, interpret: bool = False):
-    """Fused batched DVBP placement step over ``L`` independent lanes.
+def select_pad_geometry(n: int, d: int, bn: int = 256):
+    """Kernel layout for an ``n``-slot, ``d``-dim pool: (Np, dpad, bn, nb).
+    Shared with ``core.jaxsim`` so the scan carry can live pre-padded."""
+    dpad = max(128, -(-d // 128) * 128)
+    bn_ = min(bn, max(n, 8))
+    nb = -(-n // bn_)
+    return nb * bn_, dpad, bn_, nb
 
-    loads: (L, N, d) per-slot load vectors; counts/alive/open_seq/access_seq/
-    closes: (L, N) slot state; size: (L, d) arriving item; pdep/now: (L,)
-    scalars; dmask: (L, d) real-dimension mask (1.0 real / 0.0 padding).
 
-    Returns ``(slot, found, no_free)``, each ``(L,)`` - the slot the policy
-    places into (the best feasible bin, else the first free slot, else slot
-    0 with ``no_free`` set), matching ``core.jaxsim._select_slot`` decision
-    -for-decision.
+def fitscore_select_batch_padded(loads, counts, alive, open_seq, access_seq,
+                                 closes, size, pdep, now, dmask, cmask=None,
+                                 *, policy: str, n: int, bn: int = 256,
+                                 interpret: bool = False):
+    """``fitscore_select_batch`` for state already in kernel layout.
+
+    Arguments are pre-padded per :func:`select_pad_geometry`: loads
+    (L, Np, dpad); counts/alive/open_seq/access_seq/closes and the optional
+    category mask ``cmask`` (L, Np); size/dmask (L, dpad); pdep/now (L,).
+    ``n`` is the real slot-pool size (rows >= n are layout padding and are
+    excluded from both the feasible and the free-slot stage).
+
+    This is the replay scan's entry: ``core.jaxsim._replay_batch`` keeps its
+    whole carry in this layout, so each step reads/writes the state the
+    kernel consumes directly instead of re-padding (Np x dpad) every event
+    (~25x redundant traffic at d=5).
     """
     assert policy in SELECT_POLICIES, policy
-    L, N, d = loads.shape
-    dpad = max(128, -(-d // 128) * 128)
-    bn_ = min(bn, max(N, 8))
-    nb = -(-N // bn_)
-    Np = nb * bn_
+    L, Np, dpad = loads.shape
+    Np_, dpad_, bn_, nb = select_pad_geometry(n, 1, bn)
+    assert Np == Np_ and dpad % 128 == 0, (loads.shape, n, bn)
     f32, i32 = jnp.float32, jnp.int32
-    loads_p = jnp.zeros((L, Np, dpad), f32).at[:, :N, :d].set(
-        loads.astype(f32))
-    counts_p = jnp.zeros((L, Np), i32).at[:, :N].set(counts.astype(i32))
-    alive_p = jnp.zeros((L, Np), i32).at[:, :N].set(alive.astype(i32))
-    oseq_p = jnp.zeros((L, Np), i32).at[:, :N].set(open_seq.astype(i32))
-    aseq_p = jnp.zeros((L, Np), i32).at[:, :N].set(access_seq.astype(i32))
-    closes_p = jnp.zeros((L, Np), f32).at[:, :N].set(closes.astype(f32))
-    size_p = jnp.zeros((L, dpad), f32).at[:, :d].set(size.astype(f32))
-    dmask_p = jnp.zeros((L, dpad), f32).at[:, :d].set(dmask.astype(f32))
-    pdep_p = pdep.astype(f32).reshape(L, 1)
-    now_p = now.astype(f32).reshape(L, 1)
-
+    if cmask is None:
+        cmask = jnp.ones((L, Np), i32)
     kernel = functools.partial(_select_kernel, policy=policy, bn=bn_, nb=nb,
-                               n=N)
+                               n=n)
     out = pl.pallas_call(
         kernel,
         grid=(L, nb),
@@ -306,6 +328,7 @@ def fitscore_select_batch(loads, counts, alive, open_seq, access_seq, closes,
             pl.BlockSpec((1, bn_), lambda b, i: (b, i)),
             pl.BlockSpec((1, dpad), lambda b, i: (b, 0)),
             pl.BlockSpec((1, dpad), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, bn_), lambda b, i: (b, i)),
             pl.BlockSpec((1, 1), lambda b, i: (b, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1), lambda b, i: (b, 0),
@@ -316,6 +339,46 @@ def fitscore_select_batch(loads, counts, alive, open_seq, access_seq, closes,
         scratch_shapes=[pltpu.SMEM((2,), jnp.float32),
                         pltpu.SMEM((8,), jnp.int32)],
         interpret=interpret,
-    )(loads_p, counts_p, alive_p, oseq_p, aseq_p, closes_p, size_p, dmask_p,
-      pdep_p, now_p)
+    )(loads.astype(f32), counts.astype(i32), alive.astype(i32),
+      open_seq.astype(i32), access_seq.astype(i32), closes.astype(f32),
+      size.astype(f32), dmask.astype(f32), cmask.astype(i32),
+      pdep.astype(f32).reshape(L, 1), now.astype(f32).reshape(L, 1))
     return out[:, 0], out[:, 1] > 0, out[:, 2] > 0
+
+
+def fitscore_select_batch(loads, counts, alive, open_seq, access_seq, closes,
+                          size, pdep, now, dmask, cmask=None, *, policy: str,
+                          bn: int = 256, interpret: bool = False):
+    """Fused batched DVBP placement step over ``L`` independent lanes.
+
+    loads: (L, N, d) per-slot load vectors; counts/alive/open_seq/access_seq/
+    closes: (L, N) slot state; size: (L, d) arriving item; pdep/now: (L,)
+    scalars; dmask: (L, d) real-dimension mask (1.0 real / 0.0 padding);
+    cmask: optional (L, N) category mask (1 = category-compatible slot, see
+    ``_select_kernel``; None = unrestricted).
+
+    Returns ``(slot, found, no_free)``, each ``(L,)`` - the slot the policy
+    places into (the best feasible bin, else the first free slot, else slot
+    0 with ``no_free`` set), matching ``core.jaxsim._select_slot`` decision
+    -for-decision.  Pads the state into kernel layout on every call; hot
+    loops should hold their state pre-padded and call
+    :func:`fitscore_select_batch_padded` instead.
+    """
+    L, N, d = loads.shape
+    Np, dpad, bn_, nb = select_pad_geometry(N, d, bn)
+    f32, i32 = jnp.float32, jnp.int32
+    loads_p = jnp.zeros((L, Np, dpad), f32).at[:, :N, :d].set(
+        loads.astype(f32))
+    counts_p = jnp.zeros((L, Np), i32).at[:, :N].set(counts.astype(i32))
+    alive_p = jnp.zeros((L, Np), i32).at[:, :N].set(alive.astype(i32))
+    oseq_p = jnp.zeros((L, Np), i32).at[:, :N].set(open_seq.astype(i32))
+    aseq_p = jnp.zeros((L, Np), i32).at[:, :N].set(access_seq.astype(i32))
+    closes_p = jnp.zeros((L, Np), f32).at[:, :N].set(closes.astype(f32))
+    size_p = jnp.zeros((L, dpad), f32).at[:, :d].set(size.astype(f32))
+    dmask_p = jnp.zeros((L, dpad), f32).at[:, :d].set(dmask.astype(f32))
+    cmask_p = None if cmask is None else \
+        jnp.zeros((L, Np), i32).at[:, :N].set(cmask.astype(i32))
+    return fitscore_select_batch_padded(
+        loads_p, counts_p, alive_p, oseq_p, aseq_p, closes_p, size_p,
+        pdep, now, dmask_p, cmask_p, policy=policy, n=N, bn=bn,
+        interpret=interpret)

@@ -85,10 +85,14 @@ def fitscore(remaining, alive, item, open_seq=None, *, norm="linf",
 
 @partial(jax.jit, static_argnames=("policy", "impl"))
 def fitscore_select(loads, counts, alive, open_seq, access_seq, closes,
-                    size, pdep, now, dmask=None, *, policy, impl="auto"):
+                    size, pdep, now, dmask=None, cmask=None, *, policy,
+                    impl="auto"):
     """Fused single-state placement decision over the full 8-policy family
     (``core.jaxsim.POLICIES``): loads (N,d), counts/alive/open_seq/
-    access_seq/closes (N,), size (d,), pdep/now scalars.  Returns
+    access_seq/closes (N,), size (d,), pdep/now scalars.  ``cmask`` (N,)
+    optionally restricts the decision to category-compatible slots (1 =
+    eligible) - how the category-structured policies (CBD/CBDT, ...) route
+    their First Fit stage through the same kernel.  Returns
     (slot, found, no_free); the serving scheduler's on-device select."""
     from ..core.jaxsim import _select_slot   # leaf-safe: jaxsim -> fitscore
     from .fitscore import fitscore_select_batch
@@ -100,7 +104,8 @@ def fitscore_select(loads, counts, alive, open_seq, access_seq, closes,
             access_seq[None], closes[None], size[None],
             jnp.asarray(pdep, jnp.float32).reshape(1),
             jnp.asarray(now, jnp.float32).reshape(1), dmask[None],
+            None if cmask is None else cmask[None],
             policy=policy, interpret=(impl == "pallas_interpret"))
         return slot[0], found[0], no_free[0]
     return _select_slot(policy, loads, counts, alive, open_seq, access_seq,
-                        closes, size, pdep, now, dmask)
+                        closes, size, pdep, now, dmask, cmask)

@@ -14,9 +14,13 @@ verbatim.  For the score-based 8-policy family (``core.jaxsim.POLICIES``)
 the placement decision can also run on-device via the fused
 ``kernels.ops.fitscore_select`` kernel (``select_backend="auto"`` uses the
 Pallas kernel on TPU and its jnp twin elsewhere; "host" keeps the numpy
-algorithm zoo).  Both paths implement the same (score, opening-order)
-selection rule, so they agree decision-for-decision on fp32-exact sizes
-(tests/test_serving.py).
+algorithm zoo).  The category-structured CBD/CBDT policies run on-device
+too: the request's duration/departure class is computed host-side with the
+shared categorization functions and handed to the kernel as a *category
+mask* over the replica pool (tag == class), so their class-restricted First
+Fit is the same fused select.  Both paths implement the same
+(score, opening-order) selection rule, so they agree decision-for-decision
+on fp32-exact sizes (tests/test_serving.py).
 """
 from __future__ import annotations
 
@@ -28,10 +32,14 @@ import numpy as np
 from ..core.bins import BinPool
 from ..core.types import Arrival
 from ..core.algorithms import get_algorithm
+from ..core.algorithms.departure import departure_window
+from ..core.algorithms.duration import duration_class
 
 # scheduler policy (+ kwargs) -> jaxsim/kernel policy name
 _DEVICE_POLICIES = ("first_fit", "best_fit", "mru", "greedy",
                     "nrt_standard", "nrt_prioritized")
+# category-structured policies with an on-device masked select
+_DEVICE_CATEGORY_POLICIES = ("cbd", "cbdt")
 
 
 @dataclasses.dataclass
@@ -76,13 +84,17 @@ class DVBPScheduler:
         self.pool = BinPool(d=3)
         self.alg = get_algorithm(policy, **(policy_kwargs or {}))
         self.select_backend = select_backend
+        self._policy = policy
+        self._category_policy = policy in _DEVICE_CATEGORY_POLICIES
         if policy == "best_fit":
             norm = (policy_kwargs or {}).get("norm", "linf")
             self._device_policy = f"best_fit_{norm}"
+        elif self._category_policy:
+            self._device_policy = "first_fit"   # First Fit within the class
         else:
             self._device_policy = policy
         if select_backend != "host":
-            assert policy in _DEVICE_POLICIES, \
+            assert policy in _DEVICE_POLICIES + _DEVICE_CATEGORY_POLICIES, \
                 f"{policy!r} has no on-device select (host only)"
 
         class _Inst:   # minimal instance facade for algorithm.bind
@@ -98,18 +110,35 @@ class DVBPScheduler:
         self.placements: Dict[int, int] = {}
 
     # ------------------------------------------------------ device fast path
+    def _request_category(self, pdep: Optional[float],
+                          now: float) -> Optional[int]:
+        """The arriving request's CBD/CBDT class (None for score policies).
+        Uses the same shared categorization functions as the host classes,
+        so both paths agree on the class boundary exactly."""
+        if not self._category_policy:
+            return None
+        assert pdep is not None, \
+            f"{self.alg.name} needs predicted decode lengths"
+        if self._policy == "cbd":
+            return int(duration_class(pdep - now, self.alg.beta))
+        return int(departure_window(pdep, self.alg.rho))
+
     def _select_device(self, size: np.ndarray, pdep: Optional[float],
-                       now: float) -> int:
+                       now: float, cat: Optional[int]) -> int:
         """Fused on-device placement decision over the whole pool state.
 
         The pool uses absolute, never-reused bin indices, so the kernel's
         free-slot stage is disabled (counts=1: ``no_free`` always) and only
         the best-feasible result is consulted; -1 means "open a new bin",
-        exactly the host algorithms' contract."""
+        exactly the host algorithms' contract.  ``cat`` (CBD/CBDT) turns
+        into the kernel's category mask: only same-class replicas are
+        eligible."""
         import jax.numpy as jnp
 
         from ..kernels import ops
         p = self.pool
+        cmask = None if cat is None else \
+            jnp.asarray(p.tag == cat, jnp.int32)
         slot, found, _no_free = ops.fitscore_select(
             jnp.asarray(p.used, jnp.float32),
             jnp.ones(p._cap, jnp.int32),
@@ -119,7 +148,8 @@ class DVBPScheduler:
             jnp.asarray(np.maximum(p.indicated_close, -1e30), jnp.float32),
             jnp.asarray(size, jnp.float32),
             float(pdep) if pdep is not None else float(now), float(now),
-            policy=self._device_policy, impl=self.select_backend)
+            cmask=cmask, policy=self._device_policy,
+            impl=self.select_backend)
         return int(slot) if bool(found) else -1
 
     # ------------------------------------------------------------------- api
@@ -132,7 +162,11 @@ class DVBPScheduler:
         pdep = None if pdur is None else now + pdur
         arr = Arrival(req.rid, size, now, pdep)
         if self.select_backend != "host":
-            idx = self._select_device(size, pdep, now)
+            cat = self._request_category(pdep, now)
+            idx = self._select_device(size, pdep, now, cat)
+            if cat is not None:
+                self.alg._cat = cat   # keep the host class's tag
+                #                       bookkeeping (on_placed) in sync
         else:
             idx = self.alg.select_bin(arr)
         opened = idx < 0

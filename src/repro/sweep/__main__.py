@@ -16,9 +16,9 @@ import argparse
 
 from .grid import PredModel, SuiteSpec, SweepSpec, run_sweep, summarize_sweep
 from .store import SweepStore
-from ..core.jaxsim import POLICIES
+from ..core.jaxsim import SCAN_POLICIES
 
-SUITE_DEFAULT_SEED = {"azure": 2026, "huawei": 77}
+SUITE_DEFAULT_SEED = {"azure": 2026, "huawei": 77, "azure_trace": 0}
 
 
 def _pred(token: str) -> PredModel:
@@ -34,13 +34,17 @@ def main() -> None:
         prog="python -m repro.sweep",
         description="Evaluate a DVBP experiment grid in batched device runs.")
     ap.add_argument("--suites", nargs="+", default=["azure"],
-                    choices=["azure", "huawei"])
+                    choices=["azure", "huawei", "azure_trace"])
     ap.add_argument("--n-instances", type=int, default=6)
     ap.add_argument("--n-items", type=int, default=500)
     ap.add_argument("--suite-seed", type=int, default=None,
                     help="instance-generator seed (default: family-specific)")
+    ap.add_argument("--trace-root", default="data/azure",
+                    help="Azure Packing2020 dump directory (azure_trace)")
     ap.add_argument("--policies", default="all",
-                    help=f"comma list from {','.join(POLICIES)} or 'all'")
+                    help=f"comma list from {','.join(SCAN_POLICIES)} "
+                         "or 'all' (parametric names like cbd_beta4 / "
+                         "cbdt_rho3600 parse too)")
     ap.add_argument("--preds", nargs="+", default=["clairvoyant"],
                     help="prediction models: none | clairvoyant | "
                          "lognormal:SIGMA | uniform:EPS")
@@ -62,12 +66,12 @@ def main() -> None:
                     help="shard the lane axis over local devices")
     args = ap.parse_args()
 
-    policies = tuple(POLICIES) if args.policies == "all" else \
+    policies = tuple(SCAN_POLICIES) if args.policies == "all" else \
         tuple(args.policies.split(","))
     suites = tuple(
         SuiteSpec(fam, args.n_instances, args.n_items,
                   args.suite_seed if args.suite_seed is not None
-                  else SUITE_DEFAULT_SEED[fam])
+                  else SUITE_DEFAULT_SEED[fam], trace_root=args.trace_root)
         for fam in args.suites)
     spec = SweepSpec(
         suites=suites, policies=policies,

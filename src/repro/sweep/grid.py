@@ -4,6 +4,9 @@ seeds, expanded to batched runs and aggregated into performance ratios.
 A ``SweepSpec`` is a frozen, canonically-hashable description of the whole
 grid (the paper's empirical section is one such grid: {Azure-like +
 Huawei-like suites} x {policies} x {prediction-noise levels} x {seeds}).
+Policies may be any ``jaxsim.SCAN_POLICIES`` name - the score-based family
+AND the category-structured families (CBD/CBDT, Hybrid variants, RCP/PPE,
+Lifetime Alignment, adaptive) all replay as batched lanes.
 ``run_sweep`` expands it, drives ``runner.run_batch`` once per
 (suite, policy, prediction model), divides per-instance usage by the Eq.(1)
 lower bound, and - when given a ``SweepStore`` - skips any (suite, policy,
@@ -21,9 +24,10 @@ import numpy as np
 
 from ..core import (BoxStats, lognormal_predictions_batch, lower_bound,
                     uniform_predictions_batch)
-from ..core.jaxsim import MAX_BINS_CAP, POLICIES
+from ..core.jaxsim import MAX_BINS_CAP, POLICIES, known_policy
 from ..core.types import Instance
-from ..data import make_azure_like_suite, make_huawei_like_suite
+from ..data import (load_azure_csv, make_azure_like_suite,
+                    make_huawei_like_suite)
 from .batching import pack_instances, pad_predictions
 
 PRED_KINDS = ("none", "clairvoyant", "lognormal", "uniform")
@@ -31,12 +35,20 @@ PRED_KINDS = ("none", "clairvoyant", "lognormal", "uniform")
 
 @dataclasses.dataclass(frozen=True)
 class SuiteSpec:
-    """One instance family: which generator, how many instances, how big."""
+    """One instance family: which generator, how many instances, how big.
 
-    family: str = "azure"          # "azure" | "huawei"
+    ``family="azure_trace"`` loads the *real* Azure Packing2020 dump from
+    ``trace_root`` (see ``data.load_azure_csv``) instead of generating
+    synthetic instances: ``n_instances`` caps how many per-PM instances
+    enter the suite and ``n_items`` caps items per instance (0 = no cap).
+    Building raises ``FileNotFoundError`` when the dump is absent, so real
+    -trace suites only enter sweeps when the data is actually present."""
+
+    family: str = "azure"      # "azure" | "huawei" | "azure_trace"
     n_instances: int = 6
     n_items: int = 500
     seed: int = 2026
+    trace_root: str = "data/azure"   # only read by family="azure_trace"
 
     def build(self) -> List[Instance]:
         if self.family == "azure":
@@ -45,6 +57,17 @@ class SuiteSpec:
         if self.family == "huawei":
             return make_huawei_like_suite(self.n_instances, self.n_items,
                                           self.seed)
+        if self.family == "azure_trace":
+            insts = load_azure_csv(self.trace_root)
+            if insts is None:
+                raise FileNotFoundError(
+                    f"no Azure Packing2020 dump under {self.trace_root!r} "
+                    "(expected vmtype.csv + vmrequest.csv)")
+            insts = insts[:self.n_instances] if self.n_instances else insts
+            if self.n_items:
+                insts = [i.subset(np.arange(i.n_items) < self.n_items)
+                         for i in insts]
+            return insts
         raise ValueError(f"unknown suite family {self.family!r}")
 
     def label(self) -> str:
@@ -104,7 +127,7 @@ class SweepSpec:
 
     def __post_init__(self):
         for p in self.policies:
-            assert p in POLICIES, f"{p!r} is not a jaxsim policy"
+            assert known_policy(p), f"{p!r} is not a jaxsim scan policy"
         assert self.max_bins_cap <= MAX_BINS_CAP
 
     def canonical(self) -> Dict:

@@ -1,4 +1,4 @@
-"""Batched DVBP replay: one fused vmapped scan per (grid, policy).
+"""Batched DVBP replay: one fused lane-batched scan per (grid, policy).
 
 ``run_batch`` evaluates every lane of an ``InstanceBatch`` (and every
 prediction-seed row) in a single device computation - the per-instance
@@ -7,13 +7,20 @@ policy) pair because every instance has its own event-tensor shape; here the
 padded batch compiles once per (B, S, max_bins, policy, backend) and the
 scan runs all lanes in lockstep.
 
-Backends (``jaxsim.BACKENDS``): with ``backend="jnp"`` every lane replays as
-its own vmapped scan (PR 1's path); with "pallas"/"pallas_interpret" the
-(B, S) grid flattens to one lane axis and replays as a *single* scan over
-the event index whose per-step placement decision is the fused
-``kernels.fitscore`` Pallas kernel batched over lanes - zero host round
+Every policy in ``jaxsim.SCAN_POLICIES`` is a lane: the score-based Any Fit
+family AND the category-structured families (CBD/CBDT, Hybrid variants,
+RCP/PPE, Lifetime Alignment, adaptive) - ``core.jaxsim._replay_batch`` is
+the single replay engine, extended with carried category state.  The (B, S)
+grid always flattens to one lane axis (lane = b*S + s) and replays as a
+*single* scan over the event index.
+
+Backends (``jaxsim.BACKENDS``): with ``backend="jnp"`` the per-step
+placement decision is the inline vmapped select on a compact carry; with
+"pallas"/"pallas_interpret" it is the fused ``kernels.fitscore`` kernel
+with the scan carry held in the kernel's padded layout - zero host round
 trips per step.  "auto" resolves to the kernel on TPU, jnp elsewhere.  Both
-paths are bit-identical on fp32-exact instances (tests/test_sweep.py).
+paths are bit-identical on fp32-exact instances (tests/test_sweep.py,
+tests/test_sweep_categories.py).
 
 Sharding: when more than one local device is visible, the lane axis is
 sharded across them via ``compat.shard_map`` (lanes padded to a device
@@ -39,23 +46,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.jaxsim import (MAX_BINS_CAP, POLICIES, _replay, _replay_batch,
-                           grow_max_bins, resolve_backend)
+from ..core.jaxsim import (MAX_BINS_CAP, _replay_batch, grow_max_bins,
+                           known_policy, resolve_backend)
 from .batching import InstanceBatch, instances_pdeps
 
 
-def _flatten_lanes(sizes, times, kinds, items, pdeps, dmask):
+def _flatten_lanes(sizes, times, kinds, items, pdeps, dmask, arrivals,
+                   rdeps, n_items):
     """Flatten the (B, S) grid to L = B*S lanes, lane = b*S + s: per-lane
     arrays repeat b-major to match ``pdeps.reshape``'s row order (the single
     source of the lane ordering for both the kernel and sharded paths)."""
     B, S, n_max = pdeps.shape
     rep = (lambda a: jnp.repeat(a, S, axis=0)) if S > 1 else (lambda a: a)
     return (rep(sizes), rep(times), rep(kinds), rep(items),
-            pdeps.reshape(B * S, n_max), rep(dmask))
+            pdeps.reshape(B * S, n_max), rep(dmask), rep(arrivals),
+            rep(rdeps), rep(n_items))
 
 
-def _simulate_batch_impl(sizes, times, kinds, items, pdeps, dmask, *,
-                         policy: str, max_bins: int, backend: str = "jnp"):
+def _simulate_batch_impl(sizes, times, kinds, items, pdeps, dmask, arrivals,
+                         rdeps, n_items, *, policy: str, max_bins: int,
+                         backend: str = "jnp"):
     """pdeps: (B, S, n_max); everything else (B, ...).  Returns
     (usage (B,S), opened (B,S), overflow (B,S)) - placements are dead-code
     eliminated to keep device->host transfers small.
@@ -63,22 +73,10 @@ def _simulate_batch_impl(sizes, times, kinds, items, pdeps, dmask, *,
     Un-jitted on purpose: ``_simulate_batch_sharded`` traces this inside a
     ``shard_map`` body, and a nested ``jax.jit`` there leaks per-shard
     sharding annotations that fail HLO verification on jax 0.4.x."""
-    if backend == "jnp":
-        def lane(sz, t, k, it, pd_rows, dm):
-            def one(p):
-                usage, opened, _placements, overflow = _replay(
-                    sz, t, k, it, p, dm, policy=policy, max_bins=max_bins)
-                return usage, opened, overflow
-            return jax.vmap(one)(pd_rows)
-
-        return jax.vmap(lane)(sizes, times, kinds, items, pdeps, dmask)
-
-    # kernel path: flatten the (B, S) grid to one lane axis (lane = b*S + s)
-    # and replay everything in one scan over the event index, so each step's
-    # placement decision is a single lane-batched Pallas kernel call.
     B, S, _ = pdeps.shape
     usage, opened, _placements, overflow = _replay_batch(
-        *_flatten_lanes(sizes, times, kinds, items, pdeps, dmask),
+        *_flatten_lanes(sizes, times, kinds, items, pdeps, dmask, arrivals,
+                        rdeps, n_items),
         policy=policy, max_bins=max_bins, backend=backend)
     return (usage.reshape(B, S), opened.reshape(B, S),
             overflow.reshape(B, S))
@@ -93,29 +91,23 @@ def lane_device_count() -> int:
     return jax.local_device_count()
 
 
-def _simulate_lanes_impl(sizes, times, kinds, items, pdeps, dmask, *,
-                         policy: str, max_bins: int, backend: str):
+def _simulate_lanes_impl(sizes, times, kinds, items, pdeps, dmask, arrivals,
+                         rdeps, n_items, *, policy: str, max_bins: int,
+                         backend: str):
     """Flattened-lane replay: ``pdeps`` is (L, n_max) - exactly one
-    prediction row per lane.  This is the shard_map body: a *single-level*
-    vmap (or the lane-batched kernel scan), because a nested
-    vmap-over-seeds inside a shard body trips jax 0.4.x's sharding
-    propagation (invalid tile_assignment at HLO verification)."""
-    if backend == "jnp":
-        def one(sz, t, k, it, pd, dm):
-            usage, opened, _placements, overflow = _replay(
-                sz, t, k, it, pd, dm, policy=policy, max_bins=max_bins)
-            return usage, opened, overflow
-        return jax.vmap(one)(sizes, times, kinds, items, pdeps, dmask)
+    prediction row per lane.  This is the shard_map body: a single
+    lane-batched scan (nested vmaps inside a shard body trip jax 0.4.x's
+    sharding propagation - invalid tile_assignment at HLO verification)."""
     usage, opened, _placements, overflow = _replay_batch(
-        sizes, times, kinds, items, pdeps, dmask,
+        sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps, n_items,
         policy=policy, max_bins=max_bins, backend=backend)
     return usage, opened, overflow
 
 
 @partial(jax.jit, static_argnames=("policy", "max_bins", "backend", "ndev"))
-def _simulate_batch_sharded(sizes, times, kinds, items, pdeps, dmask, *,
-                            policy: str, max_bins: int, backend: str,
-                            ndev: int):
+def _simulate_batch_sharded(sizes, times, kinds, items, pdeps, dmask,
+                            arrivals, rdeps, n_items, *, policy: str,
+                            max_bins: int, backend: str, ndev: int):
     """Shard the flattened lane axis over ``ndev`` local devices.  L must
     be a multiple of ndev (``_run_arrays`` pads); each shard replays its
     lanes with the plain single-device computation - no collectives."""
@@ -128,7 +120,8 @@ def _simulate_batch_sharded(sizes, times, kinds, items, pdeps, dmask, *,
                 backend=backend),
         mesh=mesh, in_specs=P("lanes"), out_specs=P("lanes"),
         check_vma=False)
-    return f(sizes, times, kinds, items, pdeps, dmask)
+    return f(sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps,
+             n_items)
 
 
 def _run_arrays(arrays, *, policy: str, max_bins: int, backend: str,
@@ -174,7 +167,8 @@ def run_batch(batch: InstanceBatch, policy: str,
               max_bins_cap: int = MAX_BINS_CAP,
               auto_grow: bool = True, backend: Optional[str] = None,
               shard: str = "auto") -> BatchRunResult:
-    """Replay every lane of ``batch`` under ``policy``.
+    """Replay every lane of ``batch`` under ``policy`` (any
+    ``jaxsim.SCAN_POLICIES`` name, category-structured policies included).
 
     ``pdeps``: (B, S, n_max) predicted departure times (see
     ``batching.pad_predictions``); defaults to the real departures
@@ -185,7 +179,7 @@ def run_batch(batch: InstanceBatch, policy: str,
     the lane axis over all local devices when more than one is visible;
     "never" forces the single-device path; "always" asserts multi-device.
     """
-    assert policy in POLICIES, policy
+    assert known_policy(policy), f"{policy!r} is not a scan policy"
     assert shard in ("auto", "never", "always"), shard
     backend = resolve_backend(backend)
     if pdeps is None:
@@ -203,7 +197,7 @@ def run_batch(batch: InstanceBatch, policy: str,
     lanes = np.arange(B)
     mb = max_bins
     arrays = (batch.sizes, batch.times, batch.kinds, batch.items, pdeps,
-              batch.dmask)
+              batch.dmask, batch.arrivals, batch.pdeps, batch.n_items)
     while True:
         sub = tuple(jnp.asarray(a[lanes]) for a in arrays)
         u, o, ov = _run_arrays(sub, policy=policy, max_bins=mb,

@@ -1,10 +1,14 @@
 """AdaptiveSwitch (the paper's future-work item 1, implemented):
-invariants + regime behaviour + does-no-harm across the error spectrum."""
+invariants + regime behaviour + does-no-harm across the error spectrum,
+plus the shared departure-error estimator (one running-max signal feeding
+both the switch and PPE's guess-and-double alpha)."""
 import numpy as np
 import pytest
 
-from repro.core import (get_algorithm, lognormal_predictions, lower_bound,
-                        run)
+from repro.core import (Instance, get_algorithm, lognormal_predictions,
+                        lower_bound, run)
+from repro.core.algorithms.adaptive import (DepartureErrorEstimator,
+                                            pow2_ceiling, prediction_error)
 from repro.data import make_azure_like_suite
 
 
@@ -57,3 +61,49 @@ def test_capacity_invariants_hold(suite):
     r = run(inst, get_algorithm("adaptive"), predicted_durations=pd)
     assert np.all(r.placements >= 0)
     assert r.usage_time >= lower_bound(inst) - 1e-6
+
+
+def test_switch_decisions_pinned():
+    """Regression pin for the estimator refactor: a crafted error staircase
+    must produce exactly the same regime switches at the same arrivals."""
+    sizes = np.full((6, 1), 0.375)
+    arrivals = np.array([0.0, 10.0, 250.0, 260.0, 500.0, 510.0])
+    inst = Instance(sizes, arrivals, arrivals + 100.0, "staircase")
+    # item 1 departs at 110 with err 2 (-> greedy for items 2/3); item 3
+    # departs at 360 with err 20 (-> first_fit for items 4/5)
+    pd = np.array([100.0, 50.0, 100.0, 5.0, 100.0, 100.0])
+    alg = get_algorithm("adaptive")
+    r = run(inst, alg, predicted_durations=pd)
+    assert alg.regime_switches == 2
+    assert alg._last == 2                      # ends in the first_fit regime
+    assert alg.estimator.err == 20.0
+    assert r.n_bins_opened == 3                # one bin per concurrent pair
+
+
+def test_estimator_is_shared_with_ppe_alpha():
+    """PPE's guess-and-double alpha is pow2_ceiling of the same running-max
+    estimator AdaptiveSwitch reads - not a separate recomputation."""
+    rng = np.random.default_rng(5)
+    n = 80
+    sizes = rng.integers(1, 24, (n, 2)) / 64.0
+    arr = np.sort(rng.integers(0, 20000, n)).astype(float)
+    dur = rng.integers(10, 5000, n).astype(float)
+    inst = Instance(sizes, arr, arr + dur, "ppe").sorted_by_arrival()
+    pd = dur * rng.choice([0.25, 0.5, 1.0, 2.0, 8.0], n)
+    alg = get_algorithm("ppe")
+    run(inst, alg, predicted_durations=pd)
+    assert isinstance(alg._estimator, DepartureErrorEstimator)
+    expect = max(1.0, float(prediction_error(dur, pd).max()))
+    assert alg._estimator.err == expect
+    x = max(len(alg._seen_cats), 1)
+    assert alg._threshold() == pow2_ceiling(expect) / np.sqrt(x)
+
+
+def test_estimator_observe_is_running_max():
+    est = DepartureErrorEstimator()
+    assert est.err == 1.0 and est.pow2_alpha() == 1.0
+    est.observe(100.0, 50.0)          # err 2
+    est.observe(100.0, 100.0)         # err 1: no decrease
+    assert est.err == 2.0 and est.pow2_alpha() == 2.0
+    est.observe(10.0, 90.0)           # err 9 -> alpha 16
+    assert est.err == 9.0 and est.pow2_alpha() == 16.0

@@ -1,0 +1,86 @@
+"""The real-trace path end-to-end: a checked-in Azure-Packing2020-format
+fixture through ``data.load_azure_csv`` (cleaning rules: valid interval,
+finite 14-day horizon, per-machine dimension pruning) and into sweeps via
+``SuiteSpec(family="azure_trace")``."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import lower_bound, run
+from repro.core.jaxsim import host_algorithm, simulate
+from repro.data import load_azure_csv
+from repro.data.traces import DAY
+from repro.sweep import PredModel, SuiteSpec, SweepSpec, SweepStore, run_sweep
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "azure_packing2020")
+
+
+@pytest.fixture(scope="module")
+def trace():
+    insts = load_azure_csv(FIXTURE)
+    assert insts is not None, "fixture dump not found"
+    return insts
+
+
+def test_loader_parses_and_cleans_the_dump(trace):
+    assert [i.name for i in trace] == ["azure_pm0", "azure_pm1"]
+    pm0, pm1 = trace
+    # machine 0 has no hdd demand on any type: the dim is pruned (d=4);
+    # machine 1 uses all five dims
+    assert pm0.d == 4 and pm1.d == 5
+    # cleaning: negative starttime, missing endtime, endtime past the
+    # 14-day horizon, and empty intervals are dropped
+    assert pm0.n_items == 5 and pm1.n_items == 3
+    # times are scaled from days to seconds and sorted by arrival
+    assert pm0.arrivals[0] == 0.0 and pm0.arrivals[-1] == 2.0 * DAY
+    assert np.all(np.diff(pm1.arrivals) >= 0)
+    assert np.all(pm1.departures <= 14.0 * DAY)
+    for inst in trace:
+        assert np.all(inst.sizes > 0) and np.all(inst.sizes <= 1.0)
+        assert np.all(inst.departures > inst.arrivals)
+
+
+def test_loader_returns_none_when_absent(tmp_path):
+    assert load_azure_csv(str(tmp_path)) is None
+
+
+def test_loaded_instances_replay_on_both_engines(trace):
+    """The dump drives the oracle engine and the batched scan identically -
+    category policy included (real traces are not fp32-exact in general,
+    but this fixture is)."""
+    for policy in ("first_fit", "cbd"):
+        for inst in trace:
+            r = run(inst, host_algorithm(policy))
+            j = simulate(inst, policy, max_bins=16)
+            assert j.n_bins_opened == r.n_bins_opened, (policy, inst.name)
+            assert j.usage_time == pytest.approx(r.usage_time, abs=1e-3)
+            assert r.usage_time >= lower_bound(inst) - 1e-6
+
+
+def test_trace_suite_enters_sweeps(tmp_path, trace):
+    suite = SuiteSpec("azure_trace", n_instances=2, n_items=0,
+                      trace_root=FIXTURE)
+    assert [i.name for i in suite.build()] == ["azure_pm0", "azure_pm1"]
+    spec = SweepSpec(suites=(suite,), policies=("first_fit", "cbd"),
+                     predictions=(PredModel("clairvoyant"),), max_bins=16)
+    records = run_sweep(spec, store=SweepStore(str(tmp_path)))
+    assert len(records) == 2 * 2
+    assert all(r["ratio"] >= 1.0 - 1e-6 for r in records.values())
+    # incremental: a second run is fully cached
+    log = []
+    again = run_sweep(spec, store=SweepStore(str(tmp_path)),
+                      progress=log.append)
+    assert again == records and all(m.startswith("skip") for m in log)
+
+
+def test_trace_suite_item_cap(trace):
+    capped = SuiteSpec("azure_trace", n_instances=1, n_items=3,
+                       trace_root=FIXTURE).build()
+    assert len(capped) == 1 and capped[0].n_items == 3
+
+
+def test_trace_suite_raises_when_dump_missing(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        SuiteSpec("azure_trace", trace_root=str(tmp_path)).build()

@@ -134,11 +134,14 @@ def test_dvbp_policies_respect_replica_capacity(policy):
 @pytest.mark.parametrize("policy,kwargs", [
     ("first_fit", None), ("best_fit", {"norm": "linf"}), ("mru", None),
     ("greedy", None), ("nrt_standard", None), ("nrt_prioritized", None),
+    ("cbd", {"beta": 2.0}), ("cbdt", {"rho": 10.0}),
 ])
 def test_scheduler_device_select_matches_host(policy, kwargs):
     """The fused on-device placement decision (kernels.ops.fitscore_select)
     agrees with the host algorithm zoo decision-for-decision - including
-    the opening-order tie-break - on fp32-exact request sizes."""
+    the opening-order tie-break - on fp32-exact request sizes.  CBD/CBDT
+    run their class-restricted First Fit through the kernel's category
+    mask (tag == request class)."""
     caps = ReplicaCapacity(slots=4, kv_tokens=65536, prefill_budget=262144)
 
     def drive(backend):

@@ -1,0 +1,152 @@
+"""Category-structured policies through the single replay engine.
+
+The acceptance matrix for the unified ``_replay_batch``: every
+category-structured policy family - CBD/CBDT, Hybrid / Reduced Hybrid
+(+ direct-sum), RCP/PPE (+ modified), Lifetime Alignment, adaptive - runs
+as batched scan lanes with
+
+  * decision-for-decision parity against the host oracle classes
+    (clairvoyant AND noisy predictions, mixed-size / mixed-dimension padded
+    batches: usage time and bins-opened are exact, not approximate), and
+  * bit-identical results between the "jnp" and interpret-mode Pallas
+    backends (the category mask rides through the fused kernel).
+
+Instances are fp32-exact (sizes on a 1/64 grid, integer times, power-of-two
+prediction noise) so the fp32 scan must match the f64 oracle exactly; class
+boundaries are exact by construction (frexp categorization).
+"""
+import numpy as np
+import pytest
+
+from repro.core import Instance, run
+from repro.core.jaxsim import (CATEGORY_POLICIES, host_algorithm,
+                               known_policy, policy_spec, simulate)
+from repro.sweep import (PredModel, SuiteSpec, SweepSpec, pack_instances,
+                         pad_predictions, run_batch, run_sweep,
+                         summarize_sweep)
+
+SETTINGS = ("clairvoyant", "noisy")
+
+
+def quantized_instance(seed, n, d):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 24, (n, d)) / 64.0
+    arr = np.sort(rng.integers(0, 50000, n)).astype(float)
+    dur = rng.integers(10, 5000, n).astype(float)
+    return Instance(sizes, arr, arr + dur, f"q{seed}").sorted_by_arrival()
+
+
+def pow2_noise(inst, seed):
+    rng = np.random.default_rng(seed)
+    return inst.durations * rng.choice([0.25, 0.5, 1.0, 2.0, 4.0],
+                                       inst.n_items)
+
+
+@pytest.fixture(scope="module")
+def mixed():
+    """Mixed item counts AND dimensionality: pad events, dmask, and (for
+    hybrid_direct_sum) varying per-lane class counts."""
+    insts = [quantized_instance(1, 50, 2), quantized_instance(2, 80, 4),
+             quantized_instance(3, 30, 3)]
+    batch = pack_instances(insts)
+    preds = [np.stack([i.durations, pow2_noise(i, 100)]) for i in insts]
+    return insts, batch, pad_predictions(batch, preds), preds
+
+
+@pytest.mark.parametrize("policy", CATEGORY_POLICIES)
+def test_category_lane_matches_oracle(policy, mixed):
+    """Every category policy, every lane, clairvoyant + noisy: exact."""
+    insts, batch, pdeps, preds = mixed
+    res = run_batch(batch, policy, pdeps, max_bins=64, backend="jnp")
+    assert not res.overflowed.any()
+    for i, inst in enumerate(insts):
+        for si, setting in enumerate(SETTINGS):
+            r = run(inst, host_algorithm(policy),
+                    predicted_durations=preds[i][si])
+            assert res.n_bins_opened[i, si] == r.n_bins_opened, \
+                (policy, inst.name, setting)
+            assert res.usage_time[i, si] == r.usage_time, \
+                (policy, inst.name, setting)
+
+
+@pytest.mark.parametrize("policy", CATEGORY_POLICIES)
+def test_category_kernel_backend_bit_identical(policy, mixed):
+    """The category mask through the fused Pallas kernel (interpret mode)
+    reproduces the inline jnp path bit-for-bit."""
+    insts, batch, pdeps, _ = mixed
+    a = run_batch(batch, policy, pdeps, max_bins=32, backend="jnp")
+    b = run_batch(batch, policy, pdeps, max_bins=32,
+                  backend="pallas_interpret")
+    assert (a.usage_time == b.usage_time).all(), policy
+    assert (a.n_bins_opened == b.n_bins_opened).all(), policy
+    assert (a.max_bins == b.max_bins).all(), policy
+
+
+def test_nonclairvoyant_setting_equals_clairvoyant(mixed):
+    """PredModel("none"): prediction-requiring policies see the real
+    departures - identical to the clairvoyant replay (engine semantics)."""
+    insts, batch, _, _ = mixed
+    res = run_batch(batch, "reduced_hybrid", max_bins=64)   # pdeps=None
+    for i, inst in enumerate(insts):
+        r = run(inst, host_algorithm("reduced_hybrid"))
+        assert res.usage_time[i, 0] == r.usage_time
+
+
+def test_parametric_policy_names(mixed):
+    """cbd_beta* / cbdt_rho* parse and replay with the right parameter."""
+    insts, batch, pdeps, preds = mixed
+    for name in ("cbd_beta4", "cbdt_rho2048"):
+        assert known_policy(name)
+        res = run_batch(batch, name, pdeps, max_bins=64)
+        for i, inst in enumerate(insts):
+            r = run(inst, host_algorithm(name),
+                    predicted_durations=preds[i][0])
+            assert res.usage_time[i, 0] == r.usage_time, name
+    assert policy_spec("cbd_beta4").beta == 4.0
+    assert policy_spec("cbdt_rho2048").rho == 2048.0
+    assert not known_policy("no_such_policy")
+
+
+def test_simulate_single_instance_category(mixed):
+    """simulate() routes category policies through the same engine; the
+    jnp and interpret-mode kernel backends agree on placements (the
+    strongest decision-for-decision check between backends)."""
+    insts, _, _, _ = mixed
+    for policy in ("cbd", "ppe_modified", "la_binary"):
+        a = simulate(insts[2], policy, max_bins=16, backend="jnp")
+        b = simulate(insts[2], policy, max_bins=16,
+                     backend="pallas_interpret")
+        assert (a.placements == b.placements).all(), policy
+        assert a.usage_time == b.usage_time
+
+
+def test_category_overflow_escalation(mixed):
+    """The lane-wise slot-pool doubling ladder covers category lanes too:
+    a tiny starting pool still converges to oracle-exact results."""
+    insts, batch, pdeps, preds = mixed
+    res = run_batch(batch, "cbd", pdeps, max_bins=2)
+    assert not res.overflowed.any()
+    assert (res.max_bins > 2).any()
+    for i, inst in enumerate(insts):
+        r = run(inst, host_algorithm("cbd"),
+                predicted_durations=preds[i][0])
+        assert res.usage_time[i, 0] == r.usage_time
+
+
+def test_sweep_grid_with_category_policies(tmp_path):
+    """Category policies are sweepable lanes: SweepSpec grids over them and
+    the store caches them like any other policy."""
+    from repro.sweep import SweepStore
+    spec = SweepSpec(suites=(SuiteSpec("azure", 2, 100, 5),),
+                     policies=("first_fit", "cbd", "reduced_hybrid",
+                               "ppe_modified", "la_binary", "adaptive"),
+                     predictions=(PredModel("clairvoyant"),), max_bins=64)
+    store = SweepStore(str(tmp_path))
+    records = run_sweep(spec, store=store)
+    assert len(records) == 6 * 2
+    assert all(r["ratio"] >= 1.0 - 1e-6 for r in records.values())
+    stats = summarize_sweep(records)
+    assert ("cbd", "clairvoyant") in stats
+    log = []
+    again = run_sweep(spec, store=store, progress=log.append)
+    assert again == records and all(m.startswith("skip") for m in log)
