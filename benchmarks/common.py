@@ -25,8 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import (BoxStats, get_algorithm, lognormal_predictions,
-                        lognormal_predictions_batch, lower_bound, run,
-                        uniform_predictions, uniform_predictions_batch)
+                        lower_bound, run, uniform_predictions)
 from repro.data import load_azure_csv, make_azure_like_suite, \
     make_huawei_like_suite
 
@@ -61,28 +60,15 @@ def _lb(suite_name: str, idx: int) -> float:
     return lower_bound(_suite(suite_name)[idx])
 
 
-@functools.lru_cache()
-def _packed(suite_name: str):
-    from repro.sweep import pack_instances
-    return pack_instances(list(_suite(suite_name)))
-
-
 def _jaxsim_policy(name: str, kw: Dict) -> Optional[str]:
     """jaxsim scan-policy string for (registry name, kwargs), or None if
     the combination has no batched lane (next_fit / rr_next_fit and exotic
-    kwargs stay on the host oracle)."""
-    from repro.core.jaxsim import known_policy
-    if name == "best_fit" and set(kw) <= {"norm"}:
-        return f"best_fit_{kw.get('norm', 'linf')}"
-    if name == "cbd" and set(kw) <= {"beta"}:
-        return f"cbd_beta{kw.get('beta', 2.0):g}"
-    if name == "cbdt" and set(kw) <= {"rho"} and "rho" in kw:
-        return f"cbdt_rho{kw['rho']:g}"
-    if name == "lifetime_alignment" and set(kw) <= {"mode"}:
-        return f"la_{kw.get('mode', 'binary')}"
-    if not kw and known_policy(name):
-        return name
-    return None
+    kwargs stay on the host oracle).  Thin delegate: the mapping itself is
+    ``repro.api.Policy.from_registry`` so the figures cannot drift from
+    the sweep path."""
+    from repro.api import Policy
+    p = Policy.from_registry(name, **kw)
+    return None if p is None or not p.scan else p.name
 
 
 def alg(name: str, **kw):
@@ -91,24 +77,43 @@ def alg(name: str, **kw):
     return f
 
 
+@functools.lru_cache()
+def _workload(suite_name: str):
+    """The bench suite wrapped as an api workload (registered once so the
+    facade reuses the packed batch across figure calls)."""
+    from repro.api import instances
+    return instances(list(_suite(suite_name)), name=f"bench-{suite_name}")
+
+
 def _evaluate_batched(policy: str, suite: str, sigma: Optional[float],
                       eps: Optional[float], seeds: Sequence[int]
                       ) -> Tuple[List[float], float]:
-    from repro.sweep import pad_predictions, run_batch
-    insts = _suite(suite)
-    batch = _packed(suite)
-    preds = None
+    """Batched evaluation through the ``repro.api`` facade: one
+    ``Experiment`` cell per (policy, setting), per-instance mean ratios
+    out of the tidy records."""
+    from repro.api import Experiment, Setting
     if sigma is not None:
-        preds = [lognormal_predictions_batch(i, sigma, seeds) for i in insts]
+        setting = Setting.predicted("lognormal", sigma)
     elif eps is not None:
-        preds = [uniform_predictions_batch(i, eps, seeds) for i in insts]
+        setting = Setting.predicted("uniform", eps)
+    else:
+        setting = Setting.clairvoyant()
+    wl = _workload(suite)
+    exp = Experiment(wl, policies=(policy,), settings=(setting,),
+                     seeds=tuple(seeds))
+    from repro.sweep.grid import _built_suite
+    _built_suite(wl.suite())   # one-time suite prep outside the timing,
+    #                            mirroring the old lru-cached _packed/_lb
+    #                            (prediction sampling stays inside: it is
+    #                            work the cell genuinely re-does per seed)
     t0 = time.time()
-    pdeps = None if preds is None else pad_predictions(batch, preds)
-    res = run_batch(batch, policy, pdeps, max_bins=64)
-    n_runs = res.usage_time.size
-    secs = (time.time() - t0) / max(n_runs, 1)
-    ratios = [float(np.mean(res.usage_time[i] / _lb(suite, i)))
-              for i in range(batch.B)]
+    res = exp.run()
+    rows = res.rows()
+    secs = (time.time() - t0) / max(len(rows), 1)
+    by_inst: Dict[str, List[float]] = {}
+    for r in rows:
+        by_inst.setdefault(r["instance"], []).append(r["ratio"])
+    ratios = [float(np.mean(by_inst[i.name])) for i in _suite(suite)]
     return ratios, secs
 
 

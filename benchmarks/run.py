@@ -34,14 +34,14 @@ def _parse_row(line: str):
         return None
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--skip-perf", action="store_true")
     ap.add_argument("--skip-figures", action="store_true")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--json", default="", metavar="PATH")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     if args.fast:   # must happen before benchmarks.common is imported
         os.environ.setdefault("BENCH_INSTANCES", "4")
@@ -74,8 +74,8 @@ def main() -> None:
         # emulation programs bloat the in-process XLA state enough to skew
         # the headline sweep timing (which includes compilation).
         groups = [perf.kernels, perf.jaxsim_vs_oracle, perf.serving_fleet,
-                  perf.sweep_grid, perf.sweep_categories, perf.replay_carry,
-                  perf.fitscore_step, perf.sweep_sharded,
+                  perf.sweep_grid, perf.api_facade, perf.sweep_categories,
+                  perf.replay_carry, perf.fitscore_step, perf.sweep_sharded,
                   perf.roofline_summary]
         if args.fast:
             # sweep_batched_only re-times the full-size headline row
@@ -85,6 +85,9 @@ def main() -> None:
                                               policies=("first_fit",
                                                         "greedy")),
                       perf.sweep_batched_only,
+                      # same grid/policies as sweep_batched_only, so the
+                      # full-size facade row rides its compile cache
+                      perf.api_facade,
                       lambda: perf.sweep_categories(n_instances=6,
                                                     n_items=120,
                                                     policies=("cbd",

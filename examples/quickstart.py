@@ -1,45 +1,50 @@
-"""Quickstart: the paper in one minute.
+"""Quickstart: the paper in one minute, through the one experiment API.
 
-Packs a synthetic Azure-like DVBP instance with algorithms from all three
-settings and prints performance ratios vs. the Eq.(1) lower bound.
+One workload x one policy x one information setting -> one usage-time
+ratio vs. the Eq. (1) lower bound.  ``repro.api`` runs every cell of that
+matrix as batched scan lanes: Workload (what gets packed), Policy (how),
+Setting (what the policy is told about durations), Experiment (run it).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core import (get_algorithm, lognormal_predictions, lower_bound,
-                        run)
-from repro.data import make_azure_like_suite
+from repro import api
 
 
 def main():
-    inst = make_azure_like_suite(n_instances=1, n_items=4000)[0]
-    lb = lower_bound(inst)
-    print(f"instance {inst.name}: {inst.n_items} VMs, d={inst.d}, "
-          f"mu={inst.mu:.0f}, LB={lb:.0f} bin-seconds\n")
+    wl = api.synthetic("azure", n_instances=2, n_items=800)
 
-    print("non-clairvoyant (durations unknown):")
-    for name in ["first_fit", "mru", "next_fit", "rr_next_fit"]:
-        r = run(inst, get_algorithm(name))
-        print(f"  {r.algorithm:22s} ratio={r.ratio(lb):.3f}")
-    r = run(inst, get_algorithm("best_fit", norm="linf"))
-    print(f"  {r.algorithm:22s} ratio={r.ratio(lb):.3f}")
+    # Policies are first-class values, not strings: parse/str round-trip,
+    # structured params, capability flags, registry introspection.
+    cbd = api.Policy.parse("cbd_beta2")
+    assert str(cbd) == "cbd_beta2" and cbd.beta == 2.0 and cbd.category
+    n_scan = sum(p.scan for p in api.policies())
+    print(f"{n_scan} batched policies registered; e.g. {cbd.name}: "
+          f"family={cbd.family} device_select={cbd.device_select}\n")
 
-    print("clairvoyant (durations known):")
-    for name, kw in [("nrt_prioritized", {}), ("greedy", {}),
-                     ("cbdt", {"rho": 21600.0}), ("reduced_hybrid", {})]:
-        r = run(inst, get_algorithm(name, **kw))
-        print(f"  {r.algorithm:22s} ratio={r.ratio(lb):.3f}")
+    cells = [
+        (api.Setting.nonclairvoyant(),
+         ("first_fit", "mru", "best_fit_linf")),
+        (api.Setting.clairvoyant(),
+         ("nrt_prioritized", "greedy", "cbdt_rho21600", "reduced_hybrid")),
+        (api.Setting.predicted("lognormal", 1.0),
+         ("ppe_modified", "greedy", "nrt_prioritized", "la_binary",
+          "la_geometric")),
+    ]
+    for setting, policies in cells:
+        print(f"{setting.label()}:")
+        res = api.Experiment(wl, policies=policies,
+                             settings=(setting,), seeds=(1,)).run()
+        for (w, policy, s), st in res.summary().items():
+            print(f"  {policy:22s} ratio={st.mean:.3f}")
+        print()
 
-    print("learning-augmented (predicted durations, sigma=1):")
-    pdur = lognormal_predictions(inst, sigma=1.0, seed=1)
-    for name in ["ppe_modified", "greedy", "nrt_prioritized"]:
-        r = run(inst, get_algorithm(name), predicted_durations=pdur)
-        print(f"  {r.algorithm:22s} ratio={r.ratio(lb):.3f}")
-    for mode in ["binary", "geometric"]:
-        r = run(inst, get_algorithm("lifetime_alignment", mode=mode),
-                predicted_durations=pdur)
-        print(f"  {r.algorithm:22s} ratio={r.ratio(lb):.3f}")
+    # Host-only extras (no batched lane) still run on the oracle engine:
+    from repro.core import get_algorithm, lower_bound, run
+    from repro.data import make_azure_like_suite
+    inst = make_azure_like_suite(n_instances=1, n_items=800)[0]
+    r = run(inst, get_algorithm("next_fit"))
+    print("host-only (oracle engine):")
+    print(f"  {r.algorithm:22s} ratio={r.ratio(lower_bound(inst)):.3f}")
 
 
 if __name__ == "__main__":

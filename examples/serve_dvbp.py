@@ -1,16 +1,44 @@
-"""End-to-end serving driver: real model replicas + DVBP placement.
+"""End-to-end serving: DVBP capacity planning through the experiment API,
+plus real model replicas.
 
-Boots a fleet of reduced-config ReplicaEngines (real forward passes,
-continuous batching), schedules a Poisson request stream with the paper's
-Greedy policy, and reports replica-occupancy seconds against the fleet
-simulation baselines.
+Part 1 plans a Poisson request fleet with the batched replay engine:
+``api.serving_requests`` converts the request stream into DVBP instance
+lanes, so the same ``Experiment`` facade (and sweep store) that runs the
+paper's grids prices replica-occupancy seconds per policy, next to the
+host ``simulate_fleet`` baselines.
+
+Part 2 boots reduced-config ReplicaEngines (real forward passes,
+continuous batching) behind the DVBP scheduler.
 
     PYTHONPATH=src python examples/serve_dvbp.py
 """
+from repro import api
 from repro.launch.serve import main
+from repro.serving.fleet import (attach_predictions, simulate_fleet,
+                                 synth_requests)
+
+
+def plan_capacity():
+    reqs = attach_predictions(synth_requests(2000, seed=7), sigma=0.5,
+                              seed=7)
+    wl = api.serving_requests(reqs, name="poisson2000")
+    res = api.Experiment(
+        wl,
+        policies=("first_fit", "best_fit_linf", "greedy",
+                  "nrt_prioritized"),
+        settings=(api.Setting.predicted(),),   # the attached predictions
+    ).run()
+    print("batched capacity planning (replica-occupancy seconds):")
+    for r in res.rows():
+        print(f"  {r['policy']:18s} replica_s={r['usage_time']:10.1f} "
+              f"opened={r['n_bins_opened']:3d} ratio={r['ratio']:.3f}")
+    rr = simulate_fleet(reqs, "round_robin")
+    print(f"  {'round_robin':18s} replica_s="
+          f"{rr['replica_seconds']:10.1f} "
+          f"opened={rr['replicas_opened']:3d} (host baseline)")
+
 
 if __name__ == "__main__":
-    main(["--requests", "200", "--policy", "nrt_prioritized",
-          "--sigma", "0.5"])
+    plan_capacity()
     main(["--arch", "qwen2.5-14b", "--requests", "10", "--real",
           "--policy", "greedy"])

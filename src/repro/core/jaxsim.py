@@ -155,41 +155,75 @@ class PolicySpec:
     high: float = 16.0
 
 
-def policy_spec(policy: str) -> PolicySpec:
-    """Parse a scan policy name (including parametric variants).  Raises
-    KeyError for unknown or malformed names."""
+def _policy_param(policy: str, text: str, what: str) -> float:
+    """Parse one numeric parameter of a parametric policy name; unknown /
+    non-numeric text is a KeyError (the "not a policy" signal)."""
     try:
-        if policy in SELECT_POLICIES:
-            return PolicySpec("score")
-        if policy == "cbd" or policy.startswith("cbd_beta"):
-            beta = float(policy[len("cbd_beta"):]) if policy != "cbd" \
-                else 2.0
-            return PolicySpec("cbd", beta=beta)
-        if policy == "cbdt" or policy.startswith("cbdt_rho"):
-            rho = float(policy[len("cbdt_rho"):]) if policy != "cbdt" \
-                else CBDT_DEFAULT_RHO
-            return PolicySpec("cbdt", rho=rho)
-        if policy in ("hybrid", "reduced_hybrid", "hybrid_direct_sum",
-                      "reduced_hybrid_direct_sum"):
-            return PolicySpec("hybrid", reduced="reduced" in policy,
-                              direct_sum="direct_sum" in policy)
-        if policy in ("rcp", "ppe", "rcp_modified", "ppe_modified"):
-            return PolicySpec("rcp", large_bins="modified" not in policy,
-                              adaptive_alpha=policy.startswith("ppe"))
-        if policy in ("la_binary", "la_geometric"):
-            return PolicySpec("la", la_mode=policy[3:])
-        if policy == "adaptive" or policy.startswith("adaptive_"):
-            if policy == "adaptive":
-                return PolicySpec("adaptive")
-            low, high = policy[len("adaptive_"):].split("_")
-            return PolicySpec("adaptive", low=float(low), high=float(high))
+        return float(text)
     except ValueError as e:   # malformed parameter, e.g. "cbd_betax"
-        raise KeyError(f"malformed scan policy {policy!r}: {e}") from e
+        raise KeyError(
+            f"malformed scan policy {policy!r} ({what}): {e}") from e
+
+
+def policy_spec(policy: str) -> PolicySpec:
+    """Parse a scan policy name (including parametric variants).
+
+    Raises KeyError for unknown or malformed names and ValueError - at
+    parse time, naming the valid range - for recognized parametric names
+    whose parameter is out of range ("cbd_beta-1", "cbdt_rho0",
+    "adaptive_8_2"): those values would otherwise fail deep inside the
+    scan (log of a negative base, division by zero) or silently misbehave
+    (an adaptive switch whose regimes never trigger)."""
+    if policy in SELECT_POLICIES:
+        return PolicySpec("score")
+    if policy == "cbd" or policy.startswith("cbd_beta"):
+        beta = 2.0 if policy == "cbd" else \
+            _policy_param(policy, policy[len("cbd_beta"):], "beta")
+        if not beta > 1.0:
+            raise ValueError(
+                f"{policy!r}: cbd beta must be > 1 (duration classes are "
+                f"[beta^(i-1), beta^i)); got {beta:g}")
+        return PolicySpec("cbd", beta=beta)
+    if policy == "cbdt" or policy.startswith("cbdt_rho"):
+        rho = CBDT_DEFAULT_RHO if policy == "cbdt" else \
+            _policy_param(policy, policy[len("cbdt_rho"):], "rho")
+        if not rho > 0.0:
+            raise ValueError(
+                f"{policy!r}: cbdt rho must be > 0 seconds (the departure-"
+                f"window width); got {rho:g}")
+        return PolicySpec("cbdt", rho=rho)
+    if policy in ("hybrid", "reduced_hybrid", "hybrid_direct_sum",
+                  "reduced_hybrid_direct_sum"):
+        return PolicySpec("hybrid", reduced="reduced" in policy,
+                          direct_sum="direct_sum" in policy)
+    if policy in ("rcp", "ppe", "rcp_modified", "ppe_modified"):
+        return PolicySpec("rcp", large_bins="modified" not in policy,
+                          adaptive_alpha=policy.startswith("ppe"))
+    if policy in ("la_binary", "la_geometric"):
+        return PolicySpec("la", la_mode=policy[3:])
+    if policy == "adaptive" or policy.startswith("adaptive_"):
+        if policy == "adaptive":
+            return PolicySpec("adaptive")
+        parts = policy[len("adaptive_"):].split("_")
+        if len(parts) != 2:
+            raise KeyError(f"malformed scan policy {policy!r}: expected "
+                           "adaptive_LOW_HIGH")
+        low = _policy_param(policy, parts[0], "low")
+        high = _policy_param(policy, parts[1], "high")
+        if not 1.0 <= low <= high:
+            raise ValueError(
+                f"{policy!r}: adaptive thresholds need 1 <= low <= high "
+                f"(departure error is >= 1 by construction); got "
+                f"low={low:g} high={high:g}")
+        return PolicySpec("adaptive", low=low, high=high)
     raise KeyError(f"unknown scan policy {policy!r}; known: {SCAN_POLICIES}")
 
 
 def known_policy(policy: str) -> bool:
-    """True when ``policy`` replays through ``_replay_batch``."""
+    """True when ``policy`` replays through ``_replay_batch``.  A
+    recognized parametric name with an out-of-range parameter raises the
+    parse-time ValueError instead of answering False - callers should see
+    "cbd_beta-1" fail loudly, not fall back to a host path."""
     try:
         policy_spec(policy)
         return True

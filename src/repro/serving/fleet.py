@@ -44,9 +44,20 @@ def simulate_fleet(reqs: List[Request], policy: str = "greedy",
                    caps: ReplicaCapacity = ReplicaCapacity(),
                    tps: float = 50.0, policy_kwargs: Optional[Dict] = None
                    ) -> Dict:
-    """Event-driven fleet simulation; service time = decode_len / tps."""
+    """Event-driven fleet simulation; service time = decode_len / tps.
+
+    Legacy entry point: the host-side reference implementation.  Batched
+    capacity planning (same decisions, scan lanes, sweep store) lives in
+    ``repro.api``: ``Experiment(serving_requests(reqs, caps, tps),
+    policies, settings).run()`` - parity is proven decision-for-decision
+    in tests/test_api.py.  The host baselines (round_robin / pack_all)
+    only exist here."""
     if policy in ("round_robin", "pack_all"):
+        # the host baselines have no api replacement - no migration nag
         return _baseline(reqs, policy, caps, tps)
+    from ..api._migration import warn_legacy
+    warn_legacy("serving.fleet.simulate_fleet",
+                "repro.api.Experiment(api.serving_requests(...))")
     sched = DVBPScheduler(policy, caps, policy_kwargs, tokens_per_second=tps)
     heap = []   # (finish time, rid)
     for r in sorted(reqs, key=lambda x: x.arrival):

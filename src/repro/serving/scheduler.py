@@ -74,11 +74,14 @@ class PlacementStats:
 class DVBPScheduler:
     """Online request placement over an elastic replica fleet."""
 
-    def __init__(self, policy: str = "nrt_prioritized",
+    def __init__(self, policy="nrt_prioritized",
                  caps: ReplicaCapacity = ReplicaCapacity(),
                  policy_kwargs: Optional[Dict] = None,
                  tokens_per_second: float = 50.0,
                  select_backend: str = "host"):
+        if not isinstance(policy, str):   # an api.Policy object
+            name, kw = policy.registry_args()
+            policy, policy_kwargs = name, {**kw, **(policy_kwargs or {})}
         self.caps = caps
         self.tps = tokens_per_second
         self.pool = BinPool(d=3)

@@ -1,11 +1,14 @@
 """CLI for batched experiment sweeps.
 
+Promoted to ``python -m repro sweep`` (same flags); this module remains
+the legacy ``python -m repro.sweep`` entry and forwards unchanged.
+
 Examples:
     # clairvoyant azure grid, all on-device policies, results persisted
-    PYTHONPATH=src python -m repro.sweep --suites azure --n-instances 12
+    PYTHONPATH=src python -m repro sweep --suites azure --n-instances 12
 
     # prediction-noise sweep over three sigmas, five seeds
-    PYTHONPATH=src python -m repro.sweep --preds clairvoyant \
+    PYTHONPATH=src python -m repro sweep --preds clairvoyant \
         lognormal:0.5 lognormal:2.0 --seeds 0,1,2,3,4
 
     # incremental: re-running the same spec only computes missing groups
@@ -29,9 +32,9 @@ def _pred(token: str) -> PredModel:
     return PredModel(kind, float(param) if param else 0.0)
 
 
-def main() -> None:
+def main(argv=None, prog: str = "python -m repro sweep") -> None:
     ap = argparse.ArgumentParser(
-        prog="python -m repro.sweep",
+        prog=prog,
         description="Evaluate a DVBP experiment grid in batched device runs.")
     ap.add_argument("--suites", nargs="+", default=["azure"],
                     choices=["azure", "huawei", "azure_trace"])
@@ -64,7 +67,7 @@ def main() -> None:
     ap.add_argument("--shard", default="auto",
                     choices=["auto", "never", "always"],
                     help="shard the lane axis over local devices")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     policies = tuple(SCAN_POLICIES) if args.policies == "all" else \
         tuple(args.policies.split(","))
@@ -94,4 +97,6 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    from ..api._migration import warn_legacy
+    warn_legacy("python -m repro.sweep", "python -m repro sweep")
+    main(prog="python -m repro.sweep")

@@ -12,12 +12,21 @@ Lifetime Alignment, adaptive) all replay as batched lanes.
 lower bound, and - when given a ``SweepStore`` - skips any (suite, policy,
 prediction) group whose records are already persisted, so repeated sweeps
 are incremental.
+
+This module is the grid *engine*; the public experiment surface is
+``repro.api`` (Workload / Policy / Setting / Experiment), which builds
+``SweepSpec``s - suites and prediction models only need the duck shape
+used here (``build()`` / ``label()`` / ``n_instances``, resp. ``noisy`` /
+``label()`` / ``durations()``) and must be dataclasses so the canonical
+spec hash covers them; that is how the api's serving-request and prebuilt
+-instance workloads ride the same store with unchanged ``result_key``s.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import json
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -157,11 +166,40 @@ def result_key(suite: SuiteSpec, instance_name: str, policy: str,
 def _group_cached(records: Dict[str, Dict], suite: SuiteSpec, policy: str,
                   pred: PredModel, seeds: Sequence[int]) -> bool:
     """True when every (instance, seed) record of the group is present -
-    checked from record fields so cached suites need not be rebuilt."""
+    checked from record fields so cached suites need not be rebuilt.
+    Suites with an uncounted size (n_instances == 0: uncapped trace
+    suites) can never be proven complete without building, so they always
+    recompute."""
+    expected = suite.n_instances * len(seeds)
+    if expected <= 0:
+        return False
     have = sum(1 for r in records.values()
                if r["suite"] == suite.label() and r["policy"] == policy
                and r["pred"] == pred.label() and r["seed"] in seeds)
-    return have >= suite.n_instances * len(seeds)
+    return have >= expected
+
+
+# Built suites are deterministic functions of their (hashed) spec, so the
+# expensive prep - instance generation / trace load, Eq.(1) lower bounds,
+# event-tensor packing - is shared across run_sweep calls in one process
+# (the api facade issues one call per Experiment cell).  Bounded so giant
+# trace suites do not accumulate.
+_SUITE_CACHE: "OrderedDict[str, Tuple]" = OrderedDict()
+_SUITE_CACHE_MAX = 4
+
+
+def _built_suite(suite):
+    """(instances, lower bounds, packed batch) for one suite, cached."""
+    key = json.dumps(dataclasses.asdict(suite), sort_keys=True)
+    if key in _SUITE_CACHE:
+        _SUITE_CACHE.move_to_end(key)
+        return _SUITE_CACHE[key]
+    insts = suite.build()
+    built = (insts, [lower_bound(i) for i in insts], pack_instances(insts))
+    _SUITE_CACHE[key] = built
+    while len(_SUITE_CACHE) > _SUITE_CACHE_MAX:
+        _SUITE_CACHE.popitem(last=False)
+    return built
 
 
 def run_sweep(spec: SweepSpec, store=None, force: bool = False,
@@ -198,9 +236,7 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
             if not todo:
                 continue
             if insts is None:
-                insts = suite.build()
-                lbs = [lower_bound(i) for i in insts]
-                batch = pack_instances(insts)
+                insts, lbs, batch = _built_suite(suite)
             pdeps = pad_predictions(
                 batch, [pred.durations(i, seeds) for i in insts])
             for policy in todo:

@@ -1,0 +1,342 @@
+"""repro.api: the one experiment API.
+
+Covers (1) Policy parse/str round-trips + parse-time parameter-range
+validation, (2) Experiment == legacy run_sweep record-for-record with
+legacy result_key strings resolving against a pre-populated store, and
+(3) the serving<->sweep unification: an Experiment over a
+``serving_requests`` workload reproduces ``simulate_fleet`` usage/bins
+decision-for-decision on both backends.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.serving.fleet import simulate_fleet
+from repro.serving.scheduler import ReplicaCapacity, Request
+from repro.sweep import (PredModel, SuiteSpec, SweepSpec, SweepStore,
+                         run_sweep)
+
+# fp32-exact serving geometry: power-of-two capacities and token rate,
+# integer arrivals and lengths, so the f32 batched replay must match the
+# f64 host fleet decision-for-decision.
+CAPS = ReplicaCapacity(slots=4, kv_tokens=65536, prefill_budget=262144)
+TPS = 64.0
+
+
+def synth_exact_requests(n=150, seed=3, predicted=True):
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for rid in range(n):
+        t += float(rng.integers(1, 8))
+        reqs.append(Request(
+            rid, t, int(rng.integers(16, 512)), int(rng.integers(8, 1024)),
+            predicted_decode_len=int(rng.integers(8, 1024))
+            if predicted else None))
+    return reqs
+
+
+# ---------------------------------------------------------------- Policy
+
+def test_policy_parse_str_roundtrip():
+    for name in ("first_fit", "best_fit_l2", "cbd_beta4", "cbdt_rho3600",
+                 "adaptive_2_8", "la_geometric", "ppe_modified"):
+        p = api.Policy.parse(name)
+        assert str(p) == name
+        assert api.Policy.parse(str(p)) == p
+    p = api.Policy.parse("cbd_beta4")
+    assert p.beta == 4.0 and p.family == "cbd"
+    assert p.category and p.scan and p.device_select and p.needs_predictions
+    a = api.Policy.parse("adaptive_2_8")
+    assert (a.low, a.high) == (2.0, 8.0)
+    bf = api.Policy.parse("best_fit_l1")
+    assert bf.norm == "l1" and not bf.category and bf.device_select
+    assert api.Policy.parse(p) is p          # idempotent on Policy values
+
+
+def test_policy_registry_introspection():
+    ps = api.policies()
+    names = [p.name for p in ps]
+    assert set(api.SCAN_POLICIES) <= set(names)
+    assert "next_fit" in names               # host-only, flagged
+    nf = {p.name: p for p in ps}["next_fit"]
+    assert not nf.scan and nf.family == "host"
+    assert all(p.category == (p.name in api.CATEGORY_POLICIES)
+               for p in ps if p.scan)
+
+
+@pytest.mark.parametrize("bad,frag", [
+    ("cbd_beta-1", "must be > 1"),
+    ("cbd_beta1", "must be > 1"),
+    ("cbd_beta0.25", "must be > 1"),
+    ("cbdt_rho0", "must be > 0"),
+    ("cbdt_rho-3600", "must be > 0"),
+    ("adaptive_8_2", "1 <= low <= high"),
+    ("adaptive_0.5_4", "1 <= low <= high"),
+])
+def test_parametric_policy_range_validated_at_parse(bad, frag):
+    """Out-of-range parameters fail at parse time with the valid range in
+    the message - not deep inside the scan."""
+    with pytest.raises(ValueError, match="got"):
+        api.Policy.parse(bad)
+    with pytest.raises(ValueError) as ei:
+        api.Policy.parse(bad)
+    assert frag in str(ei.value)
+    # the engine-level entry points surface the same error
+    from repro.core.jaxsim import known_policy, policy_spec
+    with pytest.raises(ValueError):
+        policy_spec(bad)
+    with pytest.raises(ValueError):
+        known_policy(bad)
+    with pytest.raises(ValueError):
+        SweepSpec(policies=(bad,))
+
+
+def test_unknown_and_malformed_policies_are_keyerrors():
+    for name in ("no_such_policy", "cbd_betax", "adaptive_1_2_3"):
+        with pytest.raises(KeyError):
+            api.Policy.parse(name)
+
+
+def test_policy_from_registry_matches_scan_lanes():
+    assert api.Policy.from_registry("best_fit", norm="l2").name == \
+        "best_fit_l2"
+    assert api.Policy.from_registry("cbd", beta=4.0).name == "cbd_beta4"
+    assert api.Policy.from_registry("cbdt", rho=3600.0).name == \
+        "cbdt_rho3600"
+    assert api.Policy.from_registry(
+        "lifetime_alignment", mode="geometric").name == "la_geometric"
+    assert api.Policy.from_registry("next_fit") is None or \
+        not api.Policy.from_registry("next_fit").scan
+    assert api.Policy.from_registry("best_fit", norm="l2", exotic=1) is None
+    # round trip back to the host oracle registry
+    name, kw = api.Policy.parse("cbd_beta4").registry_args()
+    assert (name, kw) == ("cbd", {"beta": 4.0})
+
+
+# ---------------------------------------------------- Experiment == sweep
+
+def test_experiment_matches_legacy_run_sweep_and_store(tmp_path):
+    """The facade produces record-identical results to run_sweep, and
+    legacy result_key strings written by run_sweep resolve as cache hits
+    for the Experiment."""
+    suite = SuiteSpec("azure", 2, 120, seed=5)
+    spec = SweepSpec(suites=(suite,), policies=("first_fit", "greedy"),
+                     predictions=(PredModel("clairvoyant"),
+                                  PredModel("lognormal", 1.0)),
+                     seeds=(0, 1), max_bins=32)
+    store = SweepStore(str(tmp_path))
+    legacy = run_sweep(spec, store=store)          # pre-populate the store
+
+    exp = api.Experiment(
+        api.synthetic("azure", 2, 120, seed=5),
+        policies=("first_fit", api.Policy.parse("greedy")),
+        settings=(api.Setting.clairvoyant(),
+                  api.Setting.predicted("lognormal", 1.0)),
+        seeds=(0, 1), max_bins=32)
+    log = []
+    res = exp.run(store=str(tmp_path), progress=log.append)
+    assert res.records == legacy
+    assert log and all(m.startswith("skip") for m in log)   # all cached
+    # tidy rows carry the explicit vocabulary columns
+    rows = res.rows()
+    assert {r["setting"] for r in rows} == \
+        {"clairvoyant", "predicted:lognormal1"}
+    assert all(r["workload"] == suite.label() for r in rows)
+    st = res.summary()[(suite.label(), "greedy", "clairvoyant")]
+    assert st.n == 2 and st.mean >= 1.0 - 1e-6
+    assert res.ratios(policy="first_fit", setting="clairvoyant")
+
+
+def test_experiment_rejects_host_only_policies():
+    with pytest.raises(AssertionError, match="host-only"):
+        api.Experiment(api.synthetic("azure", 1, 50),
+                       policies=("next_fit",))
+
+
+def test_nonclairvoyant_suite_rejects_prediction_reading_policies():
+    """On suite workloads the engine cannot hide durations from greedy /
+    nrt / category policies (they would silently see real departures), so
+    the combination is an error; true non-clairvoyant policies run."""
+    wl = api.synthetic("azure", 1, 60)
+    with pytest.raises(ValueError, match="predicted-departure"):
+        api.Experiment(wl, policies=("first_fit", "greedy"),
+                       settings=(api.Setting.nonclairvoyant(),))
+    res = api.Experiment(wl, policies=("first_fit", "mru"),
+                         settings=(api.Setting.nonclairvoyant(),)).run()
+    assert {r["policy"] for r in res.rows()} == {"first_fit", "mru"}
+
+
+def test_instances_workload_digest_is_content_addressed():
+    from repro.data import make_azure_like_suite
+    insts = make_azure_like_suite(n_instances=2, n_items=60, seed=9)
+    w1 = api.instances(insts, name="a")
+    w2 = api.instances(list(insts), name="b")
+    assert w1.digest == w2.digest                 # same content
+    other = make_azure_like_suite(n_instances=2, n_items=60, seed=10)
+    assert api.instances(other).digest != w1.digest
+    # instance names are part of the content: records are keyed by them
+    renamed = [dataclasses.replace(i, name=i.name + "-v2") for i in insts]
+    assert api.instances(renamed).digest != w1.digest
+
+
+def test_results_scoped_to_the_experiment_cells(tmp_path):
+    """A shared store file accumulates records across experiments;
+    Results must only report the cells the experiment asked for."""
+    wl = api.synthetic("azure", 2, 100, seed=4)
+    api.Experiment(wl, policies=("first_fit",)).run(store=str(tmp_path))
+    res = api.Experiment(wl, policies=("greedy",)).run(store=str(tmp_path))
+    assert {r["policy"] for r in res.rows()} == {"greedy"}
+    assert len(res.records) == 2
+    assert set(res.summary()) == {(wl.label(), "greedy", "clairvoyant")}
+
+
+def test_experiment_backend_identity_on_exact_instances():
+    """Experiment passes ``backend`` through to the replay engine: jnp and
+    interpret-mode Pallas produce bit-identical records on fp32-exact
+    instances (the engine-level guarantee, surfaced at the facade)."""
+    rng = np.random.default_rng(2)
+    insts = []
+    for k, n in enumerate((40, 80)):
+        sizes = rng.integers(1, 24, (n, 3)) / 64.0
+        arr = np.sort(rng.integers(0, 5000, n)).astype(float)
+        dur = rng.integers(10, 500, n).astype(float)
+        from repro.core import Instance
+        insts.append(Instance(sizes, arr, arr + dur, f"x{k}"))
+    wl = api.instances(insts, name="exact")
+    exp = api.Experiment(wl, policies=("best_fit_linf", "cbd"),
+                         settings=(api.Setting.clairvoyant(),))
+    a = exp.run(backend="jnp")
+    b = exp.run(backend="pallas_interpret")
+    assert a.records == b.records
+
+
+# -------------------------------------------------- serving <-> sweep
+
+@pytest.mark.parametrize("policy,kwargs,backend", [
+    ("first_fit", None, "jnp"),
+    ("best_fit", {"norm": "linf"}, "jnp"),
+    ("greedy", None, "jnp"),
+    ("nrt_prioritized", None, "jnp"),
+    ("cbd", {"beta": 2.0}, "jnp"),
+    ("greedy", None, "pallas_interpret"),
+    ("cbd", {"beta": 2.0}, "pallas_interpret"),
+])
+def test_serving_requests_reproduces_simulate_fleet(policy, kwargs, backend):
+    """Fleet capacity planning through the batched replay: usage totals
+    and opened-replica counts match the host fleet simulation
+    decision-for-decision."""
+    reqs = synth_exact_requests()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        fleet = simulate_fleet(reqs, policy, CAPS, TPS,
+                               policy_kwargs=kwargs)
+    pol = api.Policy.from_registry(policy, **(kwargs or {}))
+    wl = api.serving_requests(reqs, caps=CAPS, tps=TPS, name="parity")
+    res = api.Experiment(wl, policies=(pol,),
+                         settings=(api.Setting.predicted(),)).run(
+        backend=backend)
+    (rec,) = res.rows()
+    assert rec["usage_time"] == pytest.approx(fleet["replica_seconds"],
+                                              abs=1e-3)
+    assert rec["n_bins_opened"] == fleet["replicas_opened"]
+    assert rec["setting"] == "predicted:attached"
+
+
+@pytest.mark.parametrize("policy", ["first_fit", "mru", "greedy"])
+def test_serving_nonclairvoyant_matches_fleet(policy):
+    """No predictions attached: the scheduler feeds `now` into the
+    indicated-close clock; the workload replays with pdep == arrival."""
+    reqs = synth_exact_requests(n=120, seed=9, predicted=False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        fleet = simulate_fleet(reqs, policy, CAPS, TPS)
+    wl = api.serving_requests(reqs, caps=CAPS, tps=TPS, name="noncl")
+    res = api.Experiment(wl, policies=(policy,),
+                         settings=(api.Setting.nonclairvoyant(),)).run(
+        backend="jnp")
+    (rec,) = res.rows()
+    assert rec["usage_time"] == pytest.approx(fleet["replica_seconds"],
+                                              abs=1e-3)
+    assert rec["n_bins_opened"] == fleet["replicas_opened"]
+
+
+def test_serving_records_land_in_the_sweep_store(tmp_path):
+    """Serving workloads share the sweep store: second run is a pure
+    cache hit and the persisted result_key strings parse the same
+    suite/instance/policy/pred/seed shape as grid records."""
+    reqs = synth_exact_requests(n=80, seed=1)
+    wl = api.serving_requests(reqs, caps=CAPS, tps=TPS, name="stored")
+    exp = api.Experiment(wl, policies=("first_fit", "greedy"),
+                         settings=(api.Setting.predicted(),))
+    r1 = exp.run(store=str(tmp_path))
+    log = []
+    r2 = exp.run(store=str(tmp_path), progress=log.append)
+    assert r2.records == r1.records
+    assert log and all(m.startswith("skip") for m in log)
+    for key, rec in r1.records.items():
+        suite, instance, policy, pred, seed = key.rsplit("/", 4)
+        assert suite == wl.label() and instance == "stored"
+        assert rec["policy"] == policy and rec["pred"] == pred == "attached"
+        assert rec["lower_bound"] > 0 and rec["ratio"] >= 1.0 - 1e-6
+
+
+def test_serving_requires_attached_predictions_when_asked():
+    reqs = synth_exact_requests(n=20, predicted=False)
+    wl = api.serving_requests(reqs, caps=CAPS, tps=TPS, name="nopred")
+    with pytest.raises(AssertionError, match="attached"):
+        api.Experiment(wl, policies=("greedy",),
+                       settings=(api.Setting.predicted(),)).run()
+
+
+# ----------------------------------------------------------- Setting
+
+def test_setting_parse_and_validation():
+    assert api.Setting.parse("clairvoyant").kind == "clairvoyant"
+    assert api.Setting.parse("nonclairvoyant").label() == "nonclairvoyant"
+    s = api.Setting.predicted("uniform", 4.0)
+    assert s.model == PredModel("uniform", 4.0)
+    assert s.label() == "predicted:uniform4"
+    assert api.Setting.predicted().label() == "predicted:attached"
+    with pytest.raises(AssertionError):
+        api.Setting("clairvoyant", PredModel("lognormal", 1.0))
+    with pytest.raises(AssertionError):   # exact models are not "predicted"
+        api.Setting.predicted(PredModel("clairvoyant"))
+    with pytest.raises(KeyError):
+        api.Setting.parse("oracle")
+    # synthetic workloads refuse attached predictions (they have none)
+    with pytest.raises(AssertionError, match="attached"):
+        api.synthetic("azure", 1, 50).pred_model(api.Setting.predicted())
+
+
+# ------------------------------------------------------- migration shims
+
+def test_legacy_entry_points_warn_once_with_migration_tag():
+    from repro.api import _migration
+    _migration._WARNED.clear()
+    reqs = synth_exact_requests(n=5)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        simulate_fleet(reqs, "first_fit", CAPS, TPS)
+        simulate_fleet(reqs, "first_fit", CAPS, TPS)
+    tagged = [x for x in w if "REPRO_API_MIGRATION" in str(x.message)]
+    assert len(tagged) == 1                       # once per process
+    assert issubclass(tagged[0].category, DeprecationWarning)
+    assert "repro.api" in str(tagged[0].message)
+    # the host-only baselines have no api replacement: no migration nag
+    _migration._WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        simulate_fleet(reqs, "round_robin", CAPS, TPS)
+        simulate_fleet(reqs, "pack_all", CAPS, TPS)
+    assert not [x for x in w if "REPRO_API_MIGRATION" in str(x.message)]
+
+
+def test_scheduler_accepts_policy_objects():
+    from repro.serving.scheduler import DVBPScheduler
+    sched = DVBPScheduler(api.Policy.parse("cbd_beta4"), CAPS)
+    assert sched.alg.name == "cbd_beta4"
+    sched2 = DVBPScheduler(api.Policy.parse("best_fit_l2"), CAPS)
+    assert sched2._device_policy == "best_fit_l2"
