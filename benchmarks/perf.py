@@ -147,6 +147,96 @@ def replay_carry(lanes: int = 8, n_slots: int = 2048,
             f"{t_repad/t_padded:.2f}"]
 
 
+def _quantized_suite(lanes: int, n_items: int, d: int, seed: int = 0):
+    from repro.core import Instance
+    rng = np.random.default_rng(seed)
+    insts = []
+    for s in range(lanes):
+        sizes = rng.integers(1, 24, (n_items, d)) / 64.0
+        arr = np.sort(rng.integers(0, 50000, n_items)).astype(float)
+        dur = rng.integers(10, 5000, n_items).astype(float)
+        insts.append(Instance(sizes, arr, arr + dur, f"b{s}")
+                     .sorted_by_arrival())
+    return insts
+
+
+def replay_block(lanes: int = 4, n_items: int = 120, d: int = 3,
+                 blocks=(8, 32)) -> List[str]:
+    """The event-blocked replay megakernel vs the per-event kernel path,
+    per event step (interpret mode on CPU, native on TPU).
+
+    ``perf/replay_block_T=1`` is the per-event fused-select scan (the PR-2/3
+    hot loop: one kernel launch + one full carry HBM round-trip per event);
+    ``T=8`` / ``T=32`` run whole blocks on-chip.  Middle column: us per
+    event step; derived column: speedup over the T=1 path (1.0 for the
+    baseline row).  Usage totals are asserted identical across block sizes
+    - the knob is execution-only."""
+    from repro.sweep import pack_instances, run_batch
+    batch = pack_instances(_quantized_suite(lanes, n_items, d))
+    be = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+    E = 2 * batch.n_max
+    t_step, usage = {}, {}
+    for T in (1,) + tuple(blocks):
+        kw = dict(max_bins=64, backend=be, block_events=T)
+        run_batch(batch, "best_fit_linf", **kw)           # compile/warm
+        reps = []
+        for _ in range(3):    # best-of-3: min() discards contended reps
+            t0 = time.time()
+            r = run_batch(batch, "best_fit_linf", **kw)
+            reps.append(time.time() - t0)
+        t_step[T] = min(reps) / E
+        usage[T] = float(r.usage_time.sum())
+    assert len(set(usage.values())) == 1, usage
+    rows = [f"perf/replay_block_T=1,{t_step[1]*1e6:.1f},1.00"]
+    rows += [f"perf/replay_block_T={T},{t_step[T]*1e6:.1f},"
+             f"{t_step[1]/t_step[T]:.2f}" for T in blocks]
+    return rows
+
+
+def replay_block_bytes(lanes: int = 2, n_items: int = 40, d: int = 3,
+                       T: int = 8) -> List[str]:
+    """Per-event-step HBM bytes moved by the compiled replay, from the
+    trip-count-aware HLO cost model (``launch.hlo_cost.module_cost``): the
+    per-event kernel path streams the whole padded carry through HBM once
+    per event; the blocked path touches it once per T-event block.
+
+    On a TPU the replay compiles with the native Pallas kernels, which
+    appear in the HLO as opaque custom-calls - ``charge_custom_calls=True``
+    counts their operand+result boundary (x the scan trip count), i.e. the
+    carry's real HBM round-trips.  On CPU the interpret-mode lowering is
+    plain HLO (no custom-calls; the flag is inert there), so the model
+    counts the emulated kernel's slice/update traffic directly - a looser
+    proxy, but the per-event-vs-blocked comparison is the same structural
+    question: how often does the carry cross the HBM boundary.  Middle
+    column: bytes per event step; derived: reduction factor vs per-event.
+    Asserts the blocked path moves strictly less."""
+    from functools import partial
+
+    from repro.launch.hlo_cost import module_cost
+    from repro.sweep import pack_instances
+    from repro.sweep.runner import _simulate_lanes_impl
+    batch = pack_instances(_quantized_suite(lanes, n_items, d))
+    args = tuple(jnp.asarray(a) for a in
+                 (batch.sizes, batch.times, batch.kinds, batch.items,
+                  batch.pdeps, batch.dmask, batch.arrivals, batch.pdeps,
+                  batch.n_items))
+    E = batch.times.shape[1]
+    be = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+    def bytes_per_step(block):
+        fn = jax.jit(partial(_simulate_lanes_impl, policy="best_fit_linf",
+                             max_bins=32, backend=be, block_events=block))
+        text = fn.lower(*args).compile().as_text()
+        return module_cost(text, charge_custom_calls=True).bytes / E
+
+    b_ev = bytes_per_step(0)
+    b_blk = bytes_per_step(T)
+    assert b_blk < b_ev, \
+        f"blocked replay must move strictly fewer bytes: {b_blk} vs {b_ev}"
+    return [f"perf/replay_block_bytes_perevent,{b_ev:.0f},1.00",
+            f"perf/replay_block_bytes_T={T},{b_blk:.0f},{b_ev/b_blk:.2f}"]
+
+
 def sweep_categories(n_instances: int = 28, n_items: int = 250,
                      policies=("cbd", "reduced_hybrid", "ppe_modified",
                                "la_binary"),

@@ -75,7 +75,8 @@ def main(argv=None) -> None:
         # the headline sweep timing (which includes compilation).
         groups = [perf.kernels, perf.jaxsim_vs_oracle, perf.serving_fleet,
                   perf.sweep_grid, perf.api_facade, perf.sweep_categories,
-                  perf.replay_carry, perf.fitscore_step, perf.sweep_sharded,
+                  perf.replay_carry, perf.fitscore_step, perf.replay_block,
+                  perf.replay_block_bytes, perf.sweep_sharded,
                   perf.roofline_summary]
         if args.fast:
             # sweep_batched_only re-times the full-size headline row
@@ -94,7 +95,11 @@ def main(argv=None) -> None:
                                                               "la_binary"),
                                                     seeds=(0, 1)),
                       perf.replay_carry,
-                      lambda: perf.fitscore_step(lanes=2, n_slots=512)]
+                      lambda: perf.fitscore_step(lanes=2, n_slots=512),
+                      # the event-blocked replay rows ride the fast JSON
+                      # artifact so CI tracks them per push
+                      lambda: perf.replay_block(lanes=2, n_items=60),
+                      lambda: perf.replay_block_bytes(lanes=2, n_items=30)]
         for group in groups:
             try:
                 for line in group():

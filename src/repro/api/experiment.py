@@ -170,13 +170,15 @@ class Experiment:
 
     def run(self, store: Union[None, str, SweepStore] = None,
             force: bool = False, progress=None,
-            backend: Optional[str] = None, shard: str = "auto") -> Results:
+            backend: Optional[str] = None, shard: str = "auto",
+            block_events: int = 0) -> Results:
         """Run (or resolve from the store) every cell of the grid.
 
         ``store``: a ``SweepStore``, a directory path, or None (no
-        persistence).  ``backend`` / ``shard`` pick the replay engine and
-        lane sharding exactly as in ``run_batch`` - execution arguments,
-        never part of the cached identity."""
+        persistence).  ``backend`` / ``shard`` / ``block_events`` pick the
+        replay engine, lane sharding and event-block size exactly as in
+        ``run_batch`` - execution arguments, never part of the cached
+        identity."""
         if isinstance(store, str):
             store = SweepStore(store)
         res = Results({}, {}, {})
@@ -184,7 +186,7 @@ class Experiment:
         for spec, wls in self._spec_groups():
             records = run_sweep(spec, store=store, force=force,
                                 progress=progress, backend=backend,
-                                shard=shard)
+                                shard=shard, block_events=block_events)
             # run_sweep returns everything the shared store file holds for
             # these suites; Results only reports THIS experiment's cells
             suites = {wl.suite().label() for wl in wls}

@@ -39,6 +39,15 @@ elsewhere, override with REPRO_FITSCORE_BACKEND):
     instead of re-padding the state every step (~25x redundant data traffic
     at d=5).
 
+    With ``block_events=T > 1`` the kernel backends go one rung further:
+    the scan runs over *event blocks*, each block replayed entirely
+    on-chip by ``kernels.fitscore.fitscore_replay_block`` (departure
+    application, category update, masked select and commit for T events
+    per invocation) with the packed carry resident in VMEM - the carry
+    round-trips through HBM once per block instead of once per event.
+    Execution knob only: decisions are identical
+    (tests/test_replay_block.py).
+
 Kernel and jnp paths are bit-identical on fp32-exact instances - the
 scoring constants and policy list are imported from ``kernels.fitscore`` so
 the paths cannot drift (tests/test_fitscore_select.py,
@@ -64,9 +73,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.fitscore import (F32_EPS, IBIG, SCORE_BIG, SCORE_NEG,
-                                SELECT_POLICIES, fitscore_select_batch_padded,
-                                select_pad_geometry)
+from ..kernels.fitscore import (ARRIVAL_KIND, DEPARTURE_KIND, F32_EPS, IBIG,
+                                KCAT, LOC_B, LOC_C, LOC_G, LOC_L, PAD_KIND,
+                                SCORE_BIG, SCORE_NEG, SELECT_POLICIES,
+                                TAG_BASE, TAG_GENERAL, TAG_LARGE, TAG_NONE,
+                                TAG_VIRGIN, fitscore_replay_block,
+                                fitscore_select_batch_padded,
+                                replay_carry_names, select_pad_geometry)
+from ..kernels import fitscore as _fk
 from .algorithms.adaptive import pow2_ceiling_jnp, prediction_error_jnp
 from .algorithms.departure import departure_window_jnp
 from .algorithms.duration import (dur_exponent_jnp, duration_class_jnp,
@@ -92,23 +106,9 @@ SCAN_POLICIES = POLICIES + CATEGORY_POLICIES
 # Default CBDT window: 0.25 days, the paper's best fixed rho (Fig. 4/8).
 CBDT_DEFAULT_RHO = 0.25 * 86400.0
 
-# Geometric prediction buckets X_0 = [0,1)s, X_i = [2^(i-1), 2^i)s: bucket
-# 63 would need a duration of 2^62 seconds, so 64 is a safe dense bound for
-# the carried per-bucket aggregates of RCP/PPE.
-KCAT = 64
-
-# Bin-role tags carried per slot (mirrors core.algorithms.learned; category
-# tags are >= 0: the raw class for CBD/CBDT/RCP, cls / d + key for Hybrid).
-TAG_VIRGIN, TAG_GENERAL, TAG_BASE, TAG_LARGE = -1, -2, -3, -4
-TAG_NONE = -99   # matches no slot: forces "open a new bin"
-
-# RCP/PPE item locations (carried per item for departure bookkeeping).
-LOC_G, LOC_B, LOC_C, LOC_L = 0, 1, 2, 3
-
-# Event kinds in the precomputed sequence.
-ARRIVAL_KIND = 1
-DEPARTURE_KIND = 0
-PAD_KIND = -1
+# KCAT, the TAG_* / LOC_* carry encodings and the ARRIVAL/DEPARTURE/PAD
+# event kinds are imported from kernels.fitscore (the shared definition
+# site with the event-blocked replay megakernel) and re-exported here.
 
 # Slot-pool escalation schedule shared by simulate() and repro.sweep.runner.
 MAX_BINS_CAP = 65536
@@ -436,12 +436,130 @@ def _category_setup(spec, sizes, pdeps, dmask, arrivals, rdeps, n_items,
 
 
 # ======================================================================
-# The single replay engine
+# The event-blocked replay path (kernel backends, block_events > 1)
 # ======================================================================
+
+# policy_spec family -> megakernel family (cbd and cbdt share the
+# class-restricted First Fit body; only the per-item class constant differs)
+_KERNEL_FAMILY = {"score": "score", "cbd": "cbd", "cbdt": "cbd",
+                  "hybrid": "hybrid", "rcp": "rcp", "la": "la",
+                  "adaptive": "adaptive"}
+
+
+def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
+                          arrivals, rdeps, n_items, *, policy: str,
+                          max_bins: int, backend: str, block_events: int):
+    """Event-blocked replay: a short ``lax.scan`` over blocks of ``T``
+    events, each block processed entirely on-chip by
+    ``kernels.fitscore.fitscore_replay_block`` with the packed carry
+    resident in VMEM - the carry round-trips through HBM once per block
+    instead of once per event.  Decision-for-decision identical to the
+    per-event paths (tests/test_replay_block.py)."""
+    from .algorithms.learned import LA_BINARY_SPLIT
+    spec = policy_spec(policy)
+    fam = _KERNEL_FAMILY[spec.family]
+    L, n_max, d = sizes.shape
+    f32, i32 = jnp.float32, jnp.int32
+    T = int(block_events)
+    Np, dpad, _, _ = select_pad_geometry(max_bins, d)
+
+    # pad once, exactly as the per-event kernel path does
+    sizes_p = jnp.asarray(sizes, f32) if dpad == d else \
+        jnp.zeros((L, n_max, dpad), f32).at[:, :, :d].set(sizes)
+    dm = jnp.ones((L, d), f32) if dmask is None else jnp.asarray(dmask, f32)
+    dmask_p = dm if dpad == d else \
+        jnp.zeros((L, dpad), f32).at[:, :d].set(dm)
+
+    consts, _cat0, xs_extra = _category_setup(
+        spec, sizes, pdeps, dmask, arrivals, rdeps, n_items, times, kinds,
+        items, Np)
+
+    # per-event operand streams: pure functions of the (predicted)
+    # durations, gathered by event item index and padded to a T multiple
+    # with PAD_KIND no-ops (the tail block)
+    items_i = jnp.asarray(items, i32)
+    E = times.shape[1]
+    NB = -(-E // T)
+    pad = NB * T - E
+
+    def padded(a, fill):
+        if pad == 0:
+            return a
+        return jnp.concatenate(
+            [a, jnp.full((L, pad) + a.shape[2:], fill, a.dtype)], axis=1)
+
+    def g_ev(a):
+        return jnp.take_along_axis(jnp.asarray(a), items_i, axis=1)
+
+    ev_i = {"kind": padded(jnp.asarray(kinds, i32), PAD_KIND),
+            "item": padded(items_i, 0)}
+    ev_f = {"t": padded(jnp.asarray(times, f32), 0.0),
+            "pdep": padded(g_ev(pdeps).astype(f32), 0.0)}
+    ev_size = padded(jnp.take_along_axis(sizes_p, items_i[:, :, None],
+                                         axis=1), 0.0)
+    if fam == "cbd":
+        ev_i["cat"] = padded(g_ev(consts["cat"]).astype(i32), 0)
+    elif fam == "hybrid":
+        ev_i["key"] = padded(g_ev(consts["key"]).astype(i32), 0)
+        ev_i["cls"] = padded(g_ev(consts["cls"]).astype(i32), 0)
+        ev_f["thr"] = padded(g_ev(consts["thr"]).astype(f32), 0.0)
+    elif fam == "rcp":
+        ev_i["cat"] = padded(g_ev(consts["cat"]).astype(i32), 0)
+        ev_i["large"] = padded(g_ev(consts["large"]).astype(i32), 0)
+        ev_i["x"] = padded(xs_extra[0].astype(i32), 0)
+        ev_f["p2err"] = padded(g_ev(consts["p2err"]).astype(f32), 0.0)
+    elif fam == "la":
+        ev_i["cat"] = padded(g_ev(consts["cat"]).astype(i32), 0)
+    elif fam == "adaptive":
+        ev_f["errmax"] = padded(g_ev(consts["errmax"]).astype(f32), 0.0)
+
+    def blocks(a):
+        return jnp.swapaxes(a.reshape((L, NB, T) + a.shape[2:]), 0, 1)
+
+    xs = (jax.tree.map(blocks, ev_i), jax.tree.map(blocks, ev_f),
+          blocks(ev_size))
+
+    carry = {
+        "loads": jnp.zeros((L, Np, dpad), f32),
+        "slotf": jnp.zeros((L, Np, _fk.SLOTF_COLS), f32)
+        .at[:, :, _fk.SLOTF_CLOSES].set(NEG),
+        "sloti": jnp.zeros((L, Np, _fk.SLOTI_COLS), i32)
+        .at[:, :, _fk.SLOTI_TAG].set(TAG_VIRGIN),
+        "itemi": jnp.zeros((L, n_max, _fk.ITEMI_COLS), i32)
+        .at[:, :, _fk.ITEMI_PLACE].set(-1),
+        "sf": jnp.zeros((L, _fk.SF_COLS), f32)
+        .at[:, _fk.SF_ALPHA].set(1.0).at[:, _fk.SF_ERR].set(1.0),
+        "si": jnp.zeros((L, _fk.SI_COLS), i32)
+        .at[:, _fk.SI_BASE].set(-1),
+    }
+    if fam == "hybrid":
+        carry["hagg"] = jnp.zeros((L, n_max, dpad), f32)
+    elif fam == "rcp":
+        carry["ragg"] = jnp.zeros((L, _fk.RAGG_ROWS, dpad), f32)
+        carry["ron"] = jnp.zeros((L, KCAT, _fk.RON_COLS), i32)
+
+    def step(c, ev):
+        evi_b, evf_b, size_b = ev
+        c = fitscore_replay_block(
+            c, evi_b, evf_b, size_b, dmask_p, family=fam,
+            policy=policy if fam == "score" else "first_fit",
+            n=max_bins, d=d, large_bins=spec.large_bins,
+            adaptive_alpha=spec.adaptive_alpha,
+            direct_sum=spec.direct_sum, la_mode=spec.la_mode,
+            la_split=LA_BINARY_SPLIT, low=spec.low, high=spec.high,
+            interpret=(backend == "pallas_interpret"))
+        return c, None
+
+    carry, _ = jax.lax.scan(step, carry, xs)
+    return (carry["sf"][:, _fk.SF_USAGE],
+            carry["si"][:, _fk.SI_OPENED],
+            carry["itemi"][:, :, _fk.ITEMI_PLACE],
+            carry["si"][:, _fk.SI_OVERFLOW] > 0)
+
 
 def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
                   rdeps=None, n_items=None, *, policy: str, max_bins: int,
-                  backend: str = "jnp"):
+                  backend: str = "jnp", block_events: int = 0):
     """``L`` lanes' event replays in lockstep: one scan over the event
     *index* whose step processes every lane at once, so the arrival scoring
     is a single (L, slots, d) op - on TPU the fused
@@ -462,10 +580,18 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
     natively / in interpret mode with the carry held permanently in the
     padded (Np, dpad) kernel layout (padded once here, not per step).
     """
+    kernel_layout = backend != "jnp"
+    if kernel_layout and block_events and block_events > 1:
+        # event-blocked megakernel: whole T-event blocks on-chip, carry
+        # written back to HBM once per block (kernel backends only; the
+        # per-event jnp scan below stays the bit-exact reference)
+        return _replay_batch_blocked(
+            sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps,
+            n_items, policy=policy, max_bins=max_bins, backend=backend,
+            block_events=block_events)
     spec = policy_spec(policy)
     L, n_max, d = sizes.shape
     f32, i32 = jnp.float32, jnp.int32
-    kernel_layout = backend != "jnp"
     if kernel_layout:
         Np, dpad, _, _ = select_pad_geometry(max_bins, d)
     else:
@@ -735,15 +861,17 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
     return core[8], core[10], core[7], core[11]
 
 
-@partial(jax.jit, static_argnames=("policy", "max_bins", "backend"))
+@partial(jax.jit, static_argnames=("policy", "max_bins", "backend",
+                                   "block_events"))
 def _simulate_one(sizes, times, kinds, items, pdeps, arrivals, rdeps, *,
-                  policy: str, max_bins: int, backend: str):
+                  policy: str, max_bins: int, backend: str,
+                  block_events: int = 0):
     n1 = jnp.full((1,), sizes.shape[0], jnp.int32)
     u, o, p, ov = _replay_batch(sizes[None], times[None], kinds[None],
                                 items[None], pdeps[None], None,
                                 arrivals[None], rdeps[None], n1,
                                 policy=policy, max_bins=max_bins,
-                                backend=backend)
+                                backend=backend, block_events=block_events)
     return u[0], o[0], p[0], ov[0]
 
 
@@ -764,14 +892,17 @@ def simulate(inst: Instance, policy: str = "first_fit",
              predicted_durations: Optional[np.ndarray] = None,
              max_bins: int = 256, auto_grow: bool = True,
              max_bins_cap: int = MAX_BINS_CAP,
-             backend: Optional[str] = None) -> JaxSimResult:
+             backend: Optional[str] = None,
+             block_events: int = 0) -> JaxSimResult:
     """Replay one instance (any ``SCAN_POLICIES`` policy).  If the slot pool
     overflows and ``auto_grow`` is set, retries with a doubled ``max_bins``
     (up to ``max_bins_cap``) instead of returning garbage - the same
     escalation ladder the batched sweep runner applies per lane.
     ``backend`` picks the scoring engine (see ``BACKENDS``); the default
     "auto" resolves to the Pallas kernel on TPU and the inline jnp scan step
-    elsewhere."""
+    elsewhere.  ``block_events`` > 1 (kernel backends only) replays whole
+    blocks of that many events per megakernel invocation - execution
+    detail, never affects results."""
     assert known_policy(policy), \
         f"{policy!r} is not a scan policy; known: {SCAN_POLICIES}"
     backend = resolve_backend(backend)
@@ -783,7 +914,8 @@ def simulate(inst: Instance, policy: str = "first_fit",
                   inst.departures))
     while True:
         usage, opened, placements, overflow = _simulate_one(
-            *args, policy=policy, max_bins=max_bins, backend=backend)
+            *args, policy=policy, max_bins=max_bins, backend=backend,
+            block_events=block_events)
         if not bool(overflow) or not auto_grow or max_bins >= max_bins_cap:
             break
         max_bins = grow_max_bins(max_bins, max_bins_cap)

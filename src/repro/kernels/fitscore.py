@@ -2,7 +2,7 @@
 
 At cloud scale an arrival must be scored against thousands of bin slots
 x d resource dims: a bandwidth-bound stream over the loads matrix, ideal for
-VMEM tiling.  Two kernels live here:
+VMEM tiling.  Three kernels live here:
 
 ``fitscore`` (legacy scoring kernel)
     Tiles of 256 bins x d(pad 128) are scored per grid step: feasibility
@@ -35,10 +35,24 @@ VMEM tiling.  Two kernels live here:
     step, so a whole sweep batch replays with zero host round-trips AND
     zero per-step re-padding (~25x redundant data traffic at d=5 before).
 
+``fitscore_replay_block`` (the event-blocked replay megakernel)
+    The next rung: instead of launching the select once per event and
+    round-tripping the whole carry through HBM between scan steps, a block
+    of ``T`` consecutive events is replayed *entirely on-chip* - departure
+    application, category-state update, feasibility AND category-mask
+    select, commit - with the packed padded carry resident in VMEM and
+    written back once per block.  Covers every ``core.jaxsim`` policy
+    family (score / CBD / CBDT / Hybrid / RCP-PPE / Lifetime Alignment /
+    adaptive); ``core.jaxsim._replay_batch(block_events=T)`` drives it
+    from a short ``lax.scan`` over event blocks, so the combined iteration
+    space is (lanes, event-blocks).  The serving scheduler reuses the same
+    kernel at T=1 (``kernels.ops.fitscore_select_block``).
+
 Constants ``SCORE_BIG`` / ``SCORE_NEG`` / ``F32_EPS`` / ``IBIG`` /
-``SELECT_POLICIES`` are the single source of truth for the scoring
-semantics; ``core.jaxsim`` and ``kernels.ops`` import them so the inline
-jnp paths and the kernel can never drift.
+``SELECT_POLICIES`` plus the replay encodings (event kinds, TAG_* / LOC_*
+carry tags, KCAT) are the single source of truth for the scoring and
+replay semantics; ``core.jaxsim`` and ``kernels.ops`` import them so the
+inline jnp paths and the kernels can never drift.
 """
 from __future__ import annotations
 
@@ -61,6 +75,25 @@ SCORE_BIG = 1e30     # +BIG == infeasible slot
 SCORE_NEG = -1e30    # closes sentinel for virgin/closed slots
 F32_EPS = 1e-6       # fp32 capacity tolerance (oracle uses 1e-9/f64)
 IBIG = 2 ** 30      # int sentinel for (open_seq, row) tie-break argmins
+
+# --- shared replay semantics (single definition site; core.jaxsim
+# re-exports these so the scan, the batching layer and the event-blocked
+# megakernel cannot drift) -------------------------------------------------
+ARRIVAL_KIND = 1     # event kinds in the precomputed sequence
+DEPARTURE_KIND = 0
+PAD_KIND = -1        # no-op filler event (the carry passes through)
+
+# Bin-role tags carried per slot (category tags are >= 0: the raw class for
+# CBD/CBDT/RCP, cls / d + key for Hybrid).
+TAG_VIRGIN, TAG_GENERAL, TAG_BASE, TAG_LARGE = -1, -2, -3, -4
+TAG_NONE = -99       # matches no slot: forces "open a new bin"
+
+# RCP/PPE item locations (carried per item for departure bookkeeping).
+LOC_G, LOC_B, LOC_C, LOC_L = 0, 1, 2, 3
+
+# Dense bound for RCP/PPE's carried per-category aggregates (geometric
+# prediction buckets X_i; bucket 63 would need a 2^62-second duration).
+KCAT = 64
 
 
 def _kernel(rem_ref, alive_ref, oseq_ref, item_ref, score_ref, best_ref,
@@ -344,6 +377,514 @@ def fitscore_select_batch_padded(loads, counts, alive, open_seq, access_seq,
       size.astype(f32), dmask.astype(f32), cmask.astype(i32),
       pdep.astype(f32).reshape(L, 1), now.astype(f32).reshape(L, 1))
     return out[:, 0], out[:, 1] > 0, out[:, 2] > 0
+
+
+# ======================================================================
+# Event-blocked replay megakernel: whole blocks of the DVBP scan on-chip
+# ======================================================================
+#
+# ``fitscore_replay_block`` runs a block of ``T`` consecutive events of the
+# replay scan - departure application, category-state update, feasibility
+# AND category-mask select, and the commit - entirely inside one kernel
+# invocation, for every policy family ``core.jaxsim._replay_batch``
+# replays.  The padded (Np, dpad) carry stays resident in VMEM for the
+# whole block and round-trips through HBM once per block instead of once
+# per event; ``core.jaxsim`` drives it from a short ``lax.scan`` over
+# event blocks, so the combined iteration space is (lanes, event-blocks).
+#
+# Carry layout (packed per lane; built by ``core.jaxsim``):
+#   loads  (L, Np, dpad) f32   per-slot load vectors (kernel layout)
+#   slotf  (L, Np, 8)    f32   cols: SLOTF_CLOSES, SLOTF_OPEN_TIME
+#   sloti  (L, Np, 8)    i32   cols: counts, alive, open_seq, access_seq,
+#                              category tag
+#   itemi  (L, nmax, 8)  i32   cols: placements, family aux (hybrid ingen /
+#                              rcp location)
+#   sf     (L, 8)        f32   cols: usage, PPE alpha, adaptive error
+#   si     (L, 8)        i32   cols: seq, opened, overflow, rcp base slot
+#   hagg   (L, nmax, dpad) f32   hybrid per-key aggregates (hybrid only)
+#   ragg   (L, 3*KCAT+8, dpad) f32  rcp aggregates: [gen | cat | bcat rows,
+#                              base row at RAGG_BASE] (rcp only)
+#   ron    (L, KCAT, 8)  i32   rcp per-category ON flags (rcp only)
+#
+# Per-event inputs stream in as (L, T) SMEM scalar blocks plus one
+# (L, T, dpad) VMEM block of pre-gathered item sizes - all pure functions
+# of the (predicted) durations, precomputed before the scan.
+
+SLOTF_CLOSES, SLOTF_OPEN_TIME, SLOTF_COLS = 0, 1, 8
+(SLOTI_COUNTS, SLOTI_ALIVE, SLOTI_OSEQ, SLOTI_ASEQ, SLOTI_TAG,
+ SLOTI_COLS) = 0, 1, 2, 3, 4, 8
+ITEMI_PLACE, ITEMI_AUX, ITEMI_COLS = 0, 1, 8
+SF_USAGE, SF_ALPHA, SF_ERR, SF_COLS = 0, 1, 2, 8
+SI_SEQ, SI_OPENED, SI_OVERFLOW, SI_BASE, SI_COLS = 0, 1, 2, 3, 8
+RAGG_BASE = 3 * KCAT           # rcp aggregate row holding the base bin
+RAGG_ROWS = 3 * KCAT + 8
+RON_COLS = 8
+
+REPLAY_FAMILIES = ("score", "cbd", "hybrid", "rcp", "la", "adaptive")
+# per-family extra per-event scalar streams (beyond kind/item and t/pdep)
+REPLAY_EV_I = {"score": (), "cbd": ("cat",), "hybrid": ("key", "cls"),
+               "rcp": ("cat", "large", "x"), "la": ("cat",),
+               "adaptive": ()}
+REPLAY_EV_F = {"score": (), "cbd": (), "hybrid": ("thr",),
+               "rcp": ("p2err",), "la": (), "adaptive": ("errmax",)}
+_REPLAY_EXTRA_CARRY = {"hybrid": ("hagg",), "rcp": ("ragg", "ron")}
+
+
+def replay_carry_names(family: str):
+    """Ordered carry-array names for one policy family."""
+    assert family in REPLAY_FAMILIES, family
+    return (("loads", "slotf", "sloti", "itemi", "sf", "si") +
+            _REPLAY_EXTRA_CARRY.get(family, ()))
+
+
+def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
+                         T: int, large_bins: bool, adaptive_alpha: bool,
+                         direct_sum: bool, la_mode: str, la_split: float,
+                         low: float, high: float, nc: int, ni: int, nf: int):
+    """One lane's block of ``T`` events, carry resident in VMEM.
+
+    ``refs`` = nc carry inputs, 2+ni event int streams, 2+nf event float
+    streams, ev_size, dmask, then the nc carry outputs (aliased to the
+    inputs).  The body is the exact fp32 op sequence of the jnp reference
+    step (``core.jaxsim._replay_batch``) scalarized per lane: per-slot
+    state updates are masked vector ops over (Np, 1) columns, per-item and
+    per-category aggregate rows use dynamic sublane slices.
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    names = replay_carry_names(family)
+    cin = dict(zip(names, refs[:nc]))
+    k = nc
+    evi = dict(zip(("kind", "item") + REPLAY_EV_I[family],
+                   refs[k:k + 2 + ni]))
+    k += 2 + ni
+    evf = dict(zip(("t", "pdep") + REPLAY_EV_F[family], refs[k:k + 2 + nf]))
+    k += 2 + nf
+    size_ref, dmask_ref = refs[k], refs[k + 1]
+    c = dict(zip(names, refs[k + 2:k + 2 + nc]))
+
+    # one HBM->VMEM copy per block: every event below reads and writes the
+    # (aliased) out blocks only
+    for nm in names:
+        c[nm][...] = cin[nm][...]
+
+    Np = c["loads"].shape[1]
+    nmax = c["itemi"].shape[1]
+    rowsN = jax.lax.broadcasted_iota(i32, (Np, 1), 0)
+    rowmask = rowsN < n
+    rowsI = jax.lax.broadcasted_iota(i32, (nmax, 1), 0)
+    rowsK = jax.lax.broadcasted_iota(i32, (KCAT, 1), 0)
+    dm = dmask_ref[...]                                   # (1, dpad)
+
+    def scol_i(col):
+        return c["sloti"][0, :, col:col + 1]              # (Np, 1) i32
+
+    def scol_f(col):
+        return c["slotf"][0, :, col:col + 1]              # (Np, 1) f32
+
+    def set_scol_i(col, v):
+        c["sloti"][0, :, col:col + 1] = v
+
+    def set_scol_f(col, v):
+        c["slotf"][0, :, col:col + 1] = v
+
+    def at_slot(colv, b, zero):
+        return jnp.sum(jnp.where(rowsN == b, colv, zero))
+
+    def at_item(col, j):
+        return jnp.sum(jnp.where(rowsI == j, c["itemi"][0, :, col:col + 1],
+                                 0))
+
+    def body(e, _):
+        kind = evi["kind"][0, e]
+        j = evi["item"][0, e]
+        t = evf["t"][0, e]
+        pdep = evf["pdep"][0, e]
+        size = size_ref[0, pl.ds(e, 1), :]                # (1, dpad)
+
+        def select(pol, cmask):
+            """The fused placement decision on the current carry - the
+            exact semantics of ``_select_kernel`` / ``_select_slot``.
+
+            Deliberately a third expression of the shared scoring
+            semantics (per-lane (Np, 1) columns here vs the tiled
+            (1, bn) SMEM-register select kernel): the three stay pinned
+            together by the shared SCORE_*/F32_EPS/IBIG constants and the
+            bitwise parity matrix in tests/test_fitscore_select.py +
+            tests/test_replay_block.py - any drift fails those, so edit
+            all three together when touching a policy's score."""
+            loads2 = c["loads"][0]                        # (Np, dpad)
+            cnt = scol_i(SLOTI_COUNTS)
+            oseq = scol_i(SLOTI_OSEQ)
+            closes = scol_f(SLOTF_CLOSES)
+            feas = jnp.all(size <= 1.0 - loads2 + F32_EPS, axis=1,
+                           keepdims=True) & \
+                (scol_i(SLOTI_ALIVE) > 0) & rowmask
+            if cmask is not None:
+                feas = feas & cmask
+
+            def run_min(s, fm):
+                s = jnp.where(fm, s, SCORE_BIG)
+                smin = jnp.min(s)
+                tied = jnp.where((s == smin) & fm, oseq, IBIG)
+                tseq = jnp.min(tied)
+                trow = jnp.min(jnp.where(tied == tseq, rowsN, IBIG))
+                return smin, trow
+
+            if pol == "nrt_prioritized":
+                gap = jnp.maximum(closes, t) - pdep
+                amin, arow = run_min(jnp.where(gap >= 0, gap, SCORE_BIG),
+                                     feas)
+                bmin, brow = run_min(jnp.where(gap < 0, -gap, SCORE_BIG),
+                                     feas)
+                found = (amin < SCORE_BIG) | (bmin < SCORE_BIG)
+                best = jnp.where(amin < SCORE_BIG, arow, brow)
+            else:
+                if pol == "first_fit":
+                    s = oseq.astype(f32)
+                elif pol == "mru":
+                    s = -scol_i(SLOTI_ASEQ).astype(f32)
+                elif pol.startswith("best_fit"):
+                    after = 1.0 - loads2 - size
+                    if pol.endswith("l1"):
+                        s = jnp.sum(after * dm, axis=1, keepdims=True)
+                    elif pol.endswith("l2"):
+                        m_ = after * dm
+                        s = jnp.sqrt(jnp.sum(m_ * m_, axis=1,
+                                             keepdims=True))
+                    else:
+                        s = jnp.max(jnp.where(dm > 0, after, SCORE_NEG),
+                                    axis=1, keepdims=True)
+                elif pol == "greedy":
+                    s = -jnp.maximum(closes, t)
+                else:   # nrt_standard
+                    s = jnp.abs(jnp.maximum(closes, t) - pdep)
+                smin, best = run_min(s, feas)
+                found = smin < SCORE_BIG
+            fr = jnp.min(jnp.where((cnt == 0) & rowmask, rowsN, IBIG))
+            no_free = fr >= IBIG
+            b = jnp.where(found, best, jnp.where(no_free, 0, fr))
+            return b.astype(i32), found, no_free
+
+        # ------------------------------------------------ departure branch
+        @pl.when(kind == DEPARTURE_KIND)
+        def _dep():
+            b = at_item(ITEMI_PLACE, j)
+            rm = rowsN == b
+            cnt = scol_i(SLOTI_COUNTS) - rm.astype(i32)
+            closing = at_slot(cnt, b, 0) == 0
+            ot_b = at_slot(scol_f(SLOTF_OPEN_TIME), b, 0.0)
+            c["sf"][0, SF_USAGE] = c["sf"][0, SF_USAGE] + \
+                jnp.where(closing, t - ot_b, 0.0)
+            loads2 = c["loads"][0]
+            loads2 = jnp.where(rm, loads2 - size, loads2)
+            c["loads"][0, :, :] = jnp.where(rm & closing, 0.0, loads2)
+            set_scol_i(SLOTI_COUNTS, cnt)
+            set_scol_i(SLOTI_ALIVE,
+                       jnp.where(rm & closing, 0, scol_i(SLOTI_ALIVE)))
+            set_scol_f(SLOTF_CLOSES,
+                       jnp.where(rm & closing, SCORE_NEG,
+                                 scol_f(SLOTF_CLOSES)))
+
+            if family == "hybrid":
+                keyj = evi["key"][0, e]
+                wasg = at_item(ITEMI_AUX, j) > 0
+                row = c["hagg"][0, pl.ds(keyj, 1), :]
+                c["hagg"][0, pl.ds(keyj, 1), :] = jnp.maximum(
+                    row - jnp.where(wasg, size, 0.0), 0.0)
+            elif family == "rcp":
+                catj = evi["cat"][0, e]
+                locd = at_item(ITEMI_AUX, j)
+                base = c["si"][0, SI_BASE]
+                has_base = base >= 0
+                gen_row = c["ragg"][0, pl.ds(catj, 1), :]
+                c["ragg"][0, pl.ds(catj, 1), :] = jnp.maximum(
+                    gen_row - jnp.where(locd == LOC_G, size, 0.0), 0.0)
+                cat_row = c["ragg"][0, pl.ds(KCAT + catj, 1), :]
+                new_cat = jnp.maximum(
+                    cat_row - jnp.where(locd == LOC_C, size, 0.0), 0.0)
+                c["ragg"][0, pl.ds(KCAT + catj, 1), :] = new_cat
+                oncol = c["ron"][0, :, 0:1]
+                on_cat = jnp.sum(jnp.where(rowsK == catj, oncol, 0)) > 0
+                turn_off = (locd == LOC_C) & on_cat & \
+                    (jnp.max(new_cat) < 0.5)
+                c["ron"][0, :, 0:1] = jnp.where((rowsK == catj) & turn_off,
+                                                0, oncol)
+                base_closed = closing & has_base & (b == base)
+                sz_b = jnp.where(locd == LOC_B, size, 0.0)
+                base_row = c["ragg"][0, RAGG_BASE:RAGG_BASE + 1, :]
+                c["ragg"][0, RAGG_BASE:RAGG_BASE + 1, :] = jnp.where(
+                    base_closed, 0.0, jnp.maximum(base_row - sz_b, 0.0))
+                bcat = c["ragg"][0, 2 * KCAT:3 * KCAT, :]
+                bcat = jnp.where(rowsK == catj,
+                                 jnp.maximum(bcat - sz_b, 0.0), bcat)
+                c["ragg"][0, 2 * KCAT:3 * KCAT, :] = jnp.where(
+                    base_closed, 0.0, bcat)
+                c["si"][0, SI_BASE] = jnp.where(base_closed, -1, base)
+                if adaptive_alpha:
+                    c["sf"][0, SF_ALPHA] = jnp.maximum(
+                        c["sf"][0, SF_ALPHA], evf["p2err"][0, e])
+            elif family == "adaptive":
+                c["sf"][0, SF_ERR] = jnp.maximum(c["sf"][0, SF_ERR],
+                                                 evf["errmax"][0, e])
+
+        # -------------------------------------------------- arrival branch
+        @pl.when(kind == ARRIVAL_KIND)
+        def _arr():
+            tag = scol_i(SLOTI_TAG)
+            post = None      # family commit, needs (b, rm, found)
+
+            if family == "score":
+                b, found, no_free = select(policy, None)
+
+            elif family == "cbd":
+                catj = evi["cat"][0, e]
+                b, found, no_free = select("first_fit", tag == catj)
+
+                def post(b, rm, found):
+                    set_scol_i(SLOTI_TAG,
+                               jnp.where(rm & ~found, catj, tag))
+
+            elif family == "hybrid":
+                keyj = evi["key"][0, e]
+                clsj = evi["cls"][0, e]
+                thrj = evf["thr"][0, e]
+                aggrow = c["hagg"][0, pl.ds(keyj, 1), :]
+                after = aggrow + size
+                if direct_sum:
+                    cols = jax.lax.broadcasted_iota(i32, after.shape, 1)
+                    norm = jnp.sum(jnp.where(cols == clsj, after, 0.0))
+                else:
+                    norm = jnp.max(after)
+                is_gen = norm <= thrj + F32_EPS
+                wanted = jnp.where(is_gen, clsj, d + keyj)
+                b, found, no_free = select("first_fit", tag == wanted)
+
+                def post(b, rm, found):
+                    set_scol_i(SLOTI_TAG,
+                               jnp.where(rm & ~found, wanted, tag))
+                    c["hagg"][0, pl.ds(keyj, 1), :] = aggrow + \
+                        jnp.where(is_gen, size, 0.0)
+                    aux = c["itemi"][0, :, ITEMI_AUX:ITEMI_AUX + 1]
+                    c["itemi"][0, :, ITEMI_AUX:ITEMI_AUX + 1] = jnp.where(
+                        rowsI == j, is_gen.astype(i32), aux)
+
+            elif family == "rcp":
+                catj = evi["cat"][0, e]
+                largej = evi["large"][0, e] > 0
+                x = jnp.maximum(evi["x"][0, e], 1).astype(f32)
+                coef = c["sf"][0, SF_ALPHA] if adaptive_alpha else 1.0
+                thr = coef / jnp.sqrt(x)
+                gen_row = c["ragg"][0, pl.ds(catj, 1), :]
+                fits_gen = jnp.max(gen_row + size) <= thr + F32_EPS
+                base = c["si"][0, SI_BASE]
+                has_base = base >= 0
+                base_loads = c["loads"][0, pl.ds(jnp.maximum(base, 0), 1), :]
+                base_fits = jnp.where(
+                    has_base,
+                    jnp.all(size <= 1.0 - base_loads + F32_EPS), True)
+                oncol = c["ron"][0, :, 0:1]
+                is_on = jnp.sum(jnp.where(rowsK == catj, oncol, 0)) > 0
+                d_large = largej if large_bins else False
+                d_gen = ~d_large & fits_gen
+                d_cat = ~d_large & ~fits_gen & is_on
+                d_base = ~d_large & ~fits_gen & ~is_on & base_fits
+                d_catf = ~d_large & ~fits_gen & ~is_on & ~base_fits
+                wanted = jnp.where(
+                    d_gen, TAG_GENERAL,
+                    jnp.where(d_cat, catj,
+                              jnp.where(d_base & has_base, TAG_BASE,
+                                        TAG_NONE)))
+                b, found, no_free = select("first_fit", tag == wanted)
+
+                def post(b, rm, found):
+                    open_tag = jnp.where(
+                        d_large, TAG_LARGE,
+                        jnp.where(d_gen, TAG_GENERAL,
+                                  jnp.where(d_base, TAG_BASE, catj)))
+                    tag1 = jnp.where(rm & ~found, open_tag, tag)
+                    new_base = d_base & ~has_base
+                    base_a = jnp.where(new_base, b, base)
+                    # aggregates: general / category adds, base-zeroing on
+                    # a fresh base bin, then the 1/2-threshold conversion
+                    c["ragg"][0, pl.ds(catj, 1), :] = gen_row + \
+                        jnp.where(d_gen, size, 0.0)
+                    cat_row = c["ragg"][0, pl.ds(KCAT + catj, 1), :]
+                    cat_row = cat_row + jnp.where(d_cat | d_catf, size, 0.0)
+                    bcat = c["ragg"][0, 2 * KCAT:3 * KCAT, :]
+                    bcat = jnp.where(new_base, 0.0, bcat)
+                    bcat = jnp.where(rowsK == catj,
+                                     bcat + jnp.where(d_base, size, 0.0),
+                                     bcat)
+                    base_row = c["ragg"][0, RAGG_BASE:RAGG_BASE + 1, :]
+                    base_row = jnp.where(new_base, 0.0, base_row) + \
+                        jnp.where(d_base, size, 0.0)
+                    onc = jnp.where(rowsK == catj,
+                                    oncol | d_catf.astype(i32), oncol)
+                    aux = c["itemi"][0, :, ITEMI_AUX:ITEMI_AUX + 1]
+                    locv = jnp.where(
+                        d_gen, LOC_G,
+                        jnp.where(d_base, LOC_B,
+                                  jnp.where(d_large, LOC_L, LOC_C)))
+                    aux = jnp.where(rowsI == j, locv, aux)
+                    # base conversion (paper §VI-A): base exceeded 1/2 ->
+                    # becomes a category bin of its dominant member
+                    # category, which turns ON
+                    conv = d_base & (jnp.max(base_row) > 0.5)
+                    bmax = jnp.max(bcat, axis=1, keepdims=True)   # (KCAT,1)
+                    mmax = jnp.max(bmax)
+                    dom = jnp.min(jnp.where(bmax == mmax, rowsK, IBIG))
+                    tag1 = jnp.where(rm & conv, dom, tag1)
+                    onc = jnp.where(rowsK == dom, onc | conv.astype(i32),
+                                    onc)
+                    cat_row = jnp.where(
+                        conv,
+                        cat_row + jnp.sum(
+                            jnp.where(rowsK == catj, bcat, 0.0), axis=0,
+                            keepdims=True),
+                        cat_row)
+                    catblk = c["ragg"][0, KCAT:2 * KCAT, :]
+                    # whole-block add of bcat into cat on conversion; the
+                    # catj row was already read out, so write it last
+                    catblk = jnp.where(conv, catblk + bcat, catblk)
+                    catblk = jnp.where(rowsK == catj, cat_row, catblk)
+                    c["ragg"][0, KCAT:2 * KCAT, :] = catblk
+                    aux = jnp.where(conv & (aux == LOC_B), LOC_C, aux)
+                    set_scol_i(SLOTI_TAG, tag1)
+                    c["ron"][0, :, 0:1] = onc
+                    c["itemi"][0, :, ITEMI_AUX:ITEMI_AUX + 1] = aux
+                    c["ragg"][0, 2 * KCAT:3 * KCAT, :] = jnp.where(
+                        conv, 0.0, bcat)
+                    c["ragg"][0, RAGG_BASE:RAGG_BASE + 1, :] = jnp.where(
+                        conv, 0.0, base_row)
+                    c["si"][0, SI_BASE] = jnp.where(conv, -1, base_a)
+
+            elif family == "la":
+                icat = evi["cat"][0, e]
+                remt = jnp.maximum(scol_f(SLOTF_CLOSES), t) - t   # (Np, 1)
+                if la_mode == "binary":
+                    bincat = (remt >= la_split).astype(i32)
+                else:   # geometric: frexp exponent via the f32 bit pattern
+                    bits = jax.lax.bitcast_convert_type(remt, i32)
+                    bexp = ((bits >> 23) & 0xFF) - 126
+                    bincat = jnp.where(remt < 1.0, 0, bexp)
+                same = bincat == icat
+                short = icat == 0
+                ra = select("best_fit_linf", same | short)
+                rb = select("best_fit_linf", (~same) & ~short)
+                found = ra[1] | rb[1]
+                b = jnp.where(ra[1], ra[0], rb[0]).astype(i32)
+                no_free = ra[2]
+
+            else:   # adaptive: regime-switch on the carried departure error
+                err = c["sf"][0, SF_ERR]
+                kreg = jnp.where(err < low, 0, jnp.where(err < high, 1, 2))
+                r0 = select("nrt_prioritized", None)
+                r1 = select("greedy", None)
+                r2 = select("first_fit", None)
+                b = jnp.where(kreg == 0, r0[0],
+                              jnp.where(kreg == 1, r1[0], r2[0])).astype(i32)
+                found = jnp.where(kreg == 0, r0[1],
+                                  jnp.where(kreg == 1, r1[1], r2[1]))
+                no_free = r0[2]
+
+            # ---- shared commit
+            rm = rowsN == b
+            seq = c["si"][0, SI_SEQ]
+            loads2 = c["loads"][0]
+            c["loads"][0, :, :] = jnp.where(rm, loads2 + size, loads2)
+            set_scol_i(SLOTI_COUNTS, scol_i(SLOTI_COUNTS) + rm.astype(i32))
+            set_scol_i(SLOTI_ALIVE,
+                       jnp.where(rm, 1, scol_i(SLOTI_ALIVE)))
+            set_scol_i(SLOTI_OSEQ,
+                       jnp.where(rm & ~found, seq, scol_i(SLOTI_OSEQ)))
+            set_scol_f(SLOTF_OPEN_TIME,
+                       jnp.where(rm & ~found, t, scol_f(SLOTF_OPEN_TIME)))
+            set_scol_i(SLOTI_ASEQ, jnp.where(rm, seq, scol_i(SLOTI_ASEQ)))
+            closes = scol_f(SLOTF_CLOSES)
+            set_scol_f(SLOTF_CLOSES, jnp.where(
+                rm,
+                jnp.maximum(jnp.where(found, closes, SCORE_NEG),
+                            jnp.maximum(pdep, t)),
+                closes))
+            place = c["itemi"][0, :, ITEMI_PLACE:ITEMI_PLACE + 1]
+            c["itemi"][0, :, ITEMI_PLACE:ITEMI_PLACE + 1] = jnp.where(
+                rowsI == j, b, place)
+            c["si"][0, SI_OPENED] = c["si"][0, SI_OPENED] + \
+                (~found).astype(i32)
+            c["si"][0, SI_OVERFLOW] = c["si"][0, SI_OVERFLOW] | \
+                ((~found) & no_free).astype(i32)
+            c["si"][0, SI_SEQ] = seq + 1
+            if post is not None:
+                post(b, rm, found)
+        return 0
+
+    jax.lax.fori_loop(0, T, body, 0)
+
+
+def fitscore_replay_block(carry, ev_i, ev_f, ev_size, dmask, *, family: str,
+                          policy: str, n: int, d: int,
+                          large_bins: bool = True,
+                          adaptive_alpha: bool = False,
+                          direct_sum: bool = False, la_mode: str = "binary",
+                          la_split: float = 7200.0, low: float = 2.0,
+                          high: float = 16.0, interpret: bool = False):
+    """Replay one block of ``T`` events for ``L`` lanes entirely on-chip.
+
+    ``carry`` is a dict of the packed per-lane carry arrays (see the
+    section comment above; ``replay_carry_names(family)`` lists them);
+    ``ev_i`` / ``ev_f`` map stream names to (L, T) int32/float32 arrays
+    (always ``kind``/``item`` resp. ``t``/``pdep`` plus the family's
+    ``REPLAY_EV_I`` / ``REPLAY_EV_F`` extras); ``ev_size`` is the
+    (L, T, dpad) pre-gathered item sizes and ``dmask`` the (L, dpad)
+    real-dimension mask.  ``n`` is the real slot-pool size, ``d`` the real
+    dimension count (hybrid tags encode ``d + key``).
+
+    Returns the updated carry dict.  The big VMEM carry arrays are aliased
+    input->output, so under jit the block update is in-place in HBM: the
+    carry round-trips through HBM once per *block* instead of once per
+    event (the per-event fused-select path re-reads and re-writes it every
+    scan step).
+    """
+    names = replay_carry_names(family)
+    assert set(names) == set(carry), (names, sorted(carry))
+    ev_i_names = ("kind", "item") + REPLAY_EV_I[family]
+    ev_f_names = ("t", "pdep") + REPLAY_EV_F[family]
+    f32, i32 = jnp.float32, jnp.int32
+    L, T, dpad = ev_size.shape
+    smem = ("sf", "si")
+
+    def carry_spec(a):
+        nd = a.ndim
+        if nd == 2:
+            return pl.BlockSpec((1,) + a.shape[1:], lambda b: (b, 0),
+                                memory_space=pltpu.SMEM)
+        return pl.BlockSpec((1,) + a.shape[1:], lambda b: (b, 0, 0))
+
+    carr = [carry[nm] for nm in names]
+    in_specs = [carry_spec(a) for a in carr]
+    in_specs += [pl.BlockSpec((1, T), lambda b: (b, 0),
+                              memory_space=pltpu.SMEM)
+                 for _ in ev_i_names + ev_f_names]
+    in_specs += [pl.BlockSpec((1, T, dpad), lambda b: (b, 0, 0)),
+                 pl.BlockSpec((1, dpad), lambda b: (b, 0))]
+    kernel = functools.partial(
+        _replay_block_kernel, family=family, policy=policy, n=n, d=d, T=T,
+        large_bins=large_bins, adaptive_alpha=adaptive_alpha,
+        direct_sum=direct_sum, la_mode=la_mode, la_split=la_split, low=low,
+        high=high, nc=len(names), ni=len(REPLAY_EV_I[family]),
+        nf=len(REPLAY_EV_F[family]))
+    outs = pl.pallas_call(
+        kernel,
+        grid=(L,),
+        in_specs=in_specs,
+        out_specs=[carry_spec(a) for a in carr],
+        out_shape=[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in carr],
+        input_output_aliases={idx: idx for idx, nm in enumerate(names)
+                              if nm not in smem},
+        interpret=interpret,
+    )(*carr, *(ev_i[nm] for nm in ev_i_names),
+      *(ev_f[nm] for nm in ev_f_names), ev_size, dmask)
+    return dict(zip(names, outs))
 
 
 def fitscore_select_batch(loads, counts, alive, open_seq, access_seq, closes,

@@ -109,3 +109,67 @@ def fitscore_select(loads, counts, alive, open_seq, access_seq, closes,
         return slot[0], found[0], no_free[0]
     return _select_slot(policy, loads, counts, alive, open_seq, access_seq,
                         closes, size, pdep, now, dmask, cmask)
+
+
+@partial(jax.jit, static_argnames=("policy", "n", "d", "impl"))
+def fitscore_select_block(loads, alive, open_seq, access_seq, closes, size,
+                          pdep, now, cat=None, tags=None, *, policy, n, d,
+                          impl="auto"):
+    """One placement decision through the event-blocked replay megakernel
+    at T=1 (``kernels.fitscore.fitscore_replay_block``): a single-lane
+    carry holding the pool state replays one arrival event and the chosen
+    slot is read back from the committed placement.
+
+    ``loads`` (n, d) absolute per-replica loads; ``alive``/``open_seq``/
+    ``access_seq``/``closes`` (n,); ``size`` (d,); ``pdep``/``now``
+    scalars.  ``cat``+``tags`` (the request's CBD/CBDT class and the
+    per-replica class tags) switch the kernel into its class-restricted
+    First Fit family - the same masked select the batched replay runs.
+    The pool's free-slot stage is disabled (the serving pool uses absolute,
+    never-reused bin indices), so the result is (slot, found): found=False
+    means "open a new replica", exactly the host algorithms' contract.
+    """
+    from .fitscore import (ITEMI_PLACE, SI_OPENED, SLOTF_CLOSES, SLOTI_ALIVE,
+                           SLOTI_ASEQ, SLOTI_COUNTS, SLOTI_OSEQ, SLOTI_TAG,
+                           ARRIVAL_KIND, KCAT, SCORE_NEG,
+                           fitscore_replay_block, replay_carry_names,
+                           select_pad_geometry)
+    from .fitscore import ITEMI_COLS, SF_COLS, SI_COLS, SLOTF_COLS, SLOTI_COLS
+    f32, i32 = jnp.float32, jnp.int32
+    Np, dpad, _, _ = select_pad_geometry(n, d)
+    family = "score" if cat is None else "cbd"
+    sloti = jnp.zeros((1, Np, SLOTI_COLS), i32)
+    sloti = sloti.at[0, :n, SLOTI_COUNTS].set(1)   # no free slots: the pool
+    #                                                opens bins itself
+    sloti = sloti.at[0, :n, SLOTI_ALIVE].set(alive.astype(i32))
+    sloti = sloti.at[0, :n, SLOTI_OSEQ].set(open_seq.astype(i32))
+    sloti = sloti.at[0, :n, SLOTI_ASEQ].set(access_seq.astype(i32))
+    if tags is not None:
+        sloti = sloti.at[0, :n, SLOTI_TAG].set(tags.astype(i32))
+    carry = {
+        "loads": jnp.zeros((1, Np, dpad), f32).at[0, :n, :d].set(
+            loads.astype(f32)),
+        "slotf": jnp.full((1, Np, SLOTF_COLS), 0.0, f32)
+        .at[0, :, SLOTF_CLOSES].set(SCORE_NEG)
+        .at[0, :n, SLOTF_CLOSES].set(closes.astype(f32)),
+        "sloti": sloti,
+        "itemi": jnp.full((1, 1, ITEMI_COLS), -1, i32),
+        "sf": jnp.zeros((1, SF_COLS), f32),
+        "si": jnp.zeros((1, SI_COLS), i32),
+    }
+    ev_i = {"kind": jnp.full((1, 1), ARRIVAL_KIND, i32),
+            "item": jnp.zeros((1, 1), i32)}
+    if cat is not None:
+        ev_i["cat"] = jnp.asarray(cat, i32).reshape(1, 1)
+    ev_f = {"t": jnp.asarray(now, f32).reshape(1, 1),
+            "pdep": jnp.asarray(pdep, f32).reshape(1, 1)}
+    ev_size = jnp.zeros((1, 1, dpad), f32).at[0, 0, :d].set(
+        size.astype(f32))
+    dmask = jnp.zeros((1, dpad), f32).at[0, :d].set(1.0)
+    out = fitscore_replay_block(
+        carry, ev_i, ev_f, ev_size, dmask, family=family,
+        policy=policy if family == "score" else "first_fit", n=n, d=d,
+        interpret=not _use_pallas(impl))
+    slot = out["itemi"][0, 0, ITEMI_PLACE]
+    found = out["si"][0, SI_OPENED] == 0
+    return slot, found

@@ -306,7 +306,8 @@ _SLICE_WRITE = {"dynamic-update-slice", "scatter"}
 
 
 def _comp_cost(comp: Computation, comps: Dict[str, Computation],
-               memo: Dict[Tuple[str, bool], Cost], top_level: bool) -> Cost:
+               memo: Dict[Tuple[str, bool], Cost], top_level: bool,
+               charge_custom_calls: bool = False) -> Cost:
     key = (comp.name, top_level)
     if key in memo:
         return memo[key]
@@ -314,6 +315,16 @@ def _comp_cost(comp: Computation, comps: Dict[str, Computation],
     total = Cost()
     for op in comp.ops:
         kind = op.kind
+        if kind == "custom-call" and charge_custom_calls:
+            # opaque calls (e.g. Pallas kernels) read their operands and
+            # write their result from/to HBM once per invocation - charge
+            # that boundary traffic (interior FLOPs stay unknown).  Off by
+            # default: the roofline models count kernel interiors via
+            # their own cost estimates.
+            if top_level:
+                total += Cost(0.0, _operand_bytes(op, comp.shapes) +
+                              _type_bytes(op.type_str))
+            continue
         called = {}
         for m in _CALLED_RE.finditer(op.rest):
             for nm in m.group(1).split(","):
@@ -331,8 +342,9 @@ def _comp_cost(comp: Computation, comps: Dict[str, Computation],
                     else "%" + cm.group(1)
             trip = _trip_count(comps[cond]) if cond in comps else 1
             if body in comps:
-                total += _comp_cost(comps[body], comps, memo,
-                                    top_level).scaled(trip)
+                total += _comp_cost(
+                    comps[body], comps, memo, top_level,
+                    charge_custom_calls).scaled(trip)
             continue
         if kind == "fusion":
             inner = Cost()
@@ -340,7 +352,8 @@ def _comp_cost(comp: Computation, comps: Dict[str, Computation],
             for nm in called:
                 if nm in comps:
                     inner_comp = comps[nm]
-                    inner += _comp_cost(inner_comp, comps, memo, False)
+                    inner += _comp_cost(inner_comp, comps, memo, False,
+                                        charge_custom_calls)
             total += Cost(inner.flops, 0.0, inner.wire, inner.coll_counts)
             if top_level:
                 total += Cost(0.0, _fusion_hbm_bytes(op, comp, inner_comp))
@@ -356,7 +369,8 @@ def _comp_cost(comp: Computation, comps: Dict[str, Computation],
         if kind in ("call", "conditional"):
             for nm in called:
                 if nm in comps:
-                    total += _comp_cost(comps[nm], comps, memo, top_level)
+                    total += _comp_cost(comps[nm], comps, memo,
+                                        top_level, charge_custom_calls)
         if kind in _FREE:
             continue
         # flops
@@ -385,12 +399,18 @@ def _plain_op_bytes(op: Op, comp: Computation) -> float:
     return _operand_bytes(op, comp.shapes) + _type_bytes(op.type_str)
 
 
-def module_cost(hlo_text: str) -> Cost:
+def module_cost(hlo_text: str,
+                charge_custom_calls: bool = False) -> Cost:
+    """Whole-module cost.  ``charge_custom_calls=True`` additionally
+    counts each custom-call's operand+result bytes (x enclosing trip
+    counts) - the HBM boundary traffic of opaque kernels such as Pallas
+    calls, used by the ``perf/replay_block_bytes_*`` benchmark rows."""
     comps = parse_module(hlo_text)
     if "ENTRY" not in comps:
         raise ValueError("no ENTRY computation found in HLO text")
     memo: Dict[Tuple[str, bool], Cost] = {}
-    return _comp_cost(comps["ENTRY"], comps, memo, True)
+    return _comp_cost(comps["ENTRY"], comps, memo, True,
+                      charge_custom_calls)
 
 
 _CARRYISH = {"parameter", "tuple", "get-tuple-element", "while", "constant",

@@ -78,7 +78,8 @@ class DVBPScheduler:
                  caps: ReplicaCapacity = ReplicaCapacity(),
                  policy_kwargs: Optional[Dict] = None,
                  tokens_per_second: float = 50.0,
-                 select_backend: str = "host"):
+                 select_backend: str = "host",
+                 select_block: bool = False):
         if not isinstance(policy, str):   # an api.Policy object
             name, kw = policy.registry_args()
             policy, policy_kwargs = name, {**kw, **(policy_kwargs or {})}
@@ -87,6 +88,15 @@ class DVBPScheduler:
         self.pool = BinPool(d=3)
         self.alg = get_algorithm(policy, **(policy_kwargs or {}))
         self.select_backend = select_backend
+        # route the on-device select through the event-blocked replay
+        # megakernel at T=1 (fitscore_replay_block) instead of the
+        # per-step fused select - same decisions, one kernel for both the
+        # sweep hot loop and serving
+        self.select_block = select_block
+        assert not (select_block and select_backend == "host"), \
+            "select_block routes the ON-DEVICE select through the replay " \
+            "megakernel; pick select_backend='auto'/'pallas'/" \
+            "'pallas_interpret' (the host path would silently ignore it)"
         self._policy = policy
         self._category_policy = policy in _DEVICE_CATEGORY_POLICIES
         if policy == "best_fit":
@@ -140,6 +150,23 @@ class DVBPScheduler:
 
         from ..kernels import ops
         p = self.pool
+        if self.select_block:
+            # the event-blocked replay megakernel at T=1: one arrival
+            # event replayed on a single-lane snapshot of the pool state
+            slot, found = ops.fitscore_select_block(
+                jnp.asarray(p.used, jnp.float32),
+                jnp.asarray(p.alive),
+                jnp.asarray(p.open_seq, jnp.int32),
+                jnp.asarray(p.access_seq, jnp.int32),
+                jnp.asarray(np.maximum(p.indicated_close, -1e30),
+                            jnp.float32),
+                jnp.asarray(size, jnp.float32),
+                float(pdep) if pdep is not None else float(now), float(now),
+                cat=cat, tags=None if cat is None else jnp.asarray(
+                    p.tag, jnp.int32),
+                policy=self._device_policy, n=p._cap, d=3,
+                impl=self.select_backend)
+            return int(slot) if bool(found) else -1
         cmask = None if cat is None else \
             jnp.asarray(p.tag == cat, jnp.int32)
         slot, found, _no_free = ops.fitscore_select(

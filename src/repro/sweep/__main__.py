@@ -67,6 +67,10 @@ def main(argv=None, prog: str = "python -m repro sweep") -> None:
     ap.add_argument("--shard", default="auto",
                     choices=["auto", "never", "always"],
                     help="shard the lane axis over local devices")
+    ap.add_argument("--block-events", type=int, default=0,
+                    help="kernel backends: events per megakernel "
+                         "invocation (0/1 = per-event replay); execution "
+                         "knob only, never changes results")
     args = ap.parse_args(argv)
 
     policies = tuple(SCAN_POLICIES) if args.policies == "all" else \
@@ -87,7 +91,8 @@ def main(argv=None, prog: str = "python -m repro sweep") -> None:
           f"{store.path(spec) if store else '(not stored)'}")
     records = run_sweep(spec, store=store, force=args.force,
                         progress=lambda m: print(f"# {m}", flush=True),
-                        backend=args.backend, shard=args.shard)
+                        backend=args.backend, shard=args.shard,
+                        block_events=args.block_events)
 
     print(f"{'policy':<18} {'pred':<14} {'n':>4} {'mean':>8} {'median':>8} "
           f"{'q1':>8} {'q3':>8}")

@@ -204,14 +204,15 @@ def _built_suite(suite):
 
 def run_sweep(spec: SweepSpec, store=None, force: bool = False,
               progress=None, backend: Optional[str] = None,
-              shard: str = "auto") -> Dict[str, Dict]:
+              shard: str = "auto", block_events: int = 0) -> Dict[str, Dict]:
     """Expand and run the grid; returns {result_key: record}.
 
-    ``backend`` / ``shard`` pick the replay engine and lane sharding (see
-    ``runner.run_batch``); they affect *how* the grid is computed, never the
-    results (the backends are bit-identical on fp32-exact instances), so
-    they are execution arguments rather than part of the hashed spec -
-    records computed on any backend share the store.
+    ``backend`` / ``shard`` / ``block_events`` pick the replay engine, lane
+    sharding and event-block size (see ``runner.run_batch``); they affect
+    *how* the grid is computed, never the results (the backends are
+    bit-identical on fp32-exact instances), so they are execution arguments
+    rather than part of the hashed spec - records computed on any backend
+    share the store.
 
     record schema (also persisted by SweepStore, see sweep/README.md):
       usage_time, lower_bound, ratio, n_bins_opened, overflowed, max_bins,
@@ -244,7 +245,7 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
                     f"B={batch.B} S={len(seeds)}")
                 res = run_batch(batch, policy, pdeps, spec.max_bins,
                                 spec.max_bins_cap, backend=backend,
-                                shard=shard)
+                                shard=shard, block_events=block_events)
                 for bi, inst in enumerate(insts):
                     for si, seed in enumerate(seeds):
                         records[result_key(suite, inst.name, policy, pred,

@@ -3,9 +3,12 @@
 ``run_batch`` evaluates every lane of an ``InstanceBatch`` (and every
 prediction-seed row) in a single device computation - the per-instance
 ``jaxsim.simulate`` loop re-traces and re-dispatches once per (instance,
-policy) pair because every instance has its own event-tensor shape; here the
-padded batch compiles once per (B, S, max_bins, policy, backend) and the
-scan runs all lanes in lockstep.
+policy) pair because every instance has its own event-tensor shape; here
+the padded batch compiles once per flattened padded geometry
+(L = B*S lanes, n_max, d, max_bins -> Np, policy, backend, block_events)
+and the scan runs all lanes in lockstep.  The (B, S) -> lane flattening
+happens *outside* the jit, so grids that vary which instances or how many
+seed rows fill the lanes - but not the padded geometry - share one trace.
 
 Every policy in ``jaxsim.SCAN_POLICIES`` is a lane: the score-based Any Fit
 family AND the category-structured families (CBD/CBDT, Hybrid variants,
@@ -18,9 +21,13 @@ Backends (``jaxsim.BACKENDS``): with ``backend="jnp"`` the per-step
 placement decision is the inline vmapped select on a compact carry; with
 "pallas"/"pallas_interpret" it is the fused ``kernels.fitscore`` kernel
 with the scan carry held in the kernel's padded layout - zero host round
-trips per step.  "auto" resolves to the kernel on TPU, jnp elsewhere.  Both
+trips per step.  "auto" resolves to the kernel on TPU, jnp elsewhere.
+``block_events=T > 1`` (kernel backends) goes one rung further: the
+event-blocked replay megakernel processes whole T-event blocks on-chip
+with the carry resident in VMEM, written back to HBM once per block (see
+``kernels.fitscore.fitscore_replay_block`` and sweep/README.md).  All
 paths are bit-identical on fp32-exact instances (tests/test_sweep.py,
-tests/test_sweep_categories.py).
+tests/test_sweep_categories.py, tests/test_replay_block.py).
 
 Sharding: when more than one local device is visible, the lane axis is
 sharded across them via ``compat.shard_map`` (lanes padded to a device
@@ -63,29 +70,6 @@ def _flatten_lanes(sizes, times, kinds, items, pdeps, dmask, arrivals,
             rep(rdeps), rep(n_items))
 
 
-def _simulate_batch_impl(sizes, times, kinds, items, pdeps, dmask, arrivals,
-                         rdeps, n_items, *, policy: str, max_bins: int,
-                         backend: str = "jnp"):
-    """pdeps: (B, S, n_max); everything else (B, ...).  Returns
-    (usage (B,S), opened (B,S), overflow (B,S)) - placements are dead-code
-    eliminated to keep device->host transfers small.
-
-    Un-jitted on purpose: ``_simulate_batch_sharded`` traces this inside a
-    ``shard_map`` body, and a nested ``jax.jit`` there leaks per-shard
-    sharding annotations that fail HLO verification on jax 0.4.x."""
-    B, S, _ = pdeps.shape
-    usage, opened, _placements, overflow = _replay_batch(
-        *_flatten_lanes(sizes, times, kinds, items, pdeps, dmask, arrivals,
-                        rdeps, n_items),
-        policy=policy, max_bins=max_bins, backend=backend)
-    return (usage.reshape(B, S), opened.reshape(B, S),
-            overflow.reshape(B, S))
-
-
-_simulate_batch = jax.jit(_simulate_batch_impl,
-                          static_argnames=("policy", "max_bins", "backend"))
-
-
 def lane_device_count() -> int:
     """Local devices available to shard the lane axis over."""
     return jax.local_device_count()
@@ -93,21 +77,54 @@ def lane_device_count() -> int:
 
 def _simulate_lanes_impl(sizes, times, kinds, items, pdeps, dmask, arrivals,
                          rdeps, n_items, *, policy: str, max_bins: int,
-                         backend: str):
+                         backend: str, block_events: int = 0):
     """Flattened-lane replay: ``pdeps`` is (L, n_max) - exactly one
     prediction row per lane.  This is the shard_map body: a single
     lane-batched scan (nested vmaps inside a shard body trip jax 0.4.x's
     sharding propagation - invalid tile_assignment at HLO verification)."""
     usage, opened, _placements, overflow = _replay_batch(
         sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps, n_items,
-        policy=policy, max_bins=max_bins, backend=backend)
+        policy=policy, max_bins=max_bins, backend=backend,
+        block_events=block_events)
     return usage, opened, overflow
 
 
-@partial(jax.jit, static_argnames=("policy", "max_bins", "backend", "ndev"))
+# THE jitted replay.  Keyed on the *flattened padded geometry* only -
+# (L, n_max, d) input shapes plus the static (policy, max_bins -> Np,
+# backend, block_events -> T) - so a grid sweep that varies which
+# instances / how many seed rows fill the lanes (but not the padded
+# geometry) compiles exactly once per policy
+# (tests/test_replay_block.py::test_one_trace_across_grid).  The (B, S) ->
+# lane flattening happens OUTSIDE the jit: jitting at (B, S) granularity
+# used to retrace a 6x2 grid and a 12x1 grid separately even though they
+# run the identical flattened computation.
+_simulate_lanes = jax.jit(_simulate_lanes_impl,
+                          static_argnames=("policy", "max_bins", "backend",
+                                           "block_events"))
+
+
+def _simulate_batch(sizes, times, kinds, items, pdeps, dmask, arrivals,
+                    rdeps, n_items, *, policy: str, max_bins: int,
+                    backend: str = "jnp", block_events: int = 0):
+    """pdeps: (B, S, n_max); everything else (B, ...).  Returns
+    (usage (B,S), opened (B,S), overflow (B,S)) - placements are dead-code
+    eliminated to keep device->host transfers small."""
+    B, S, _ = pdeps.shape
+    usage, opened, overflow = _simulate_lanes(
+        *_flatten_lanes(sizes, times, kinds, items, pdeps, dmask, arrivals,
+                        rdeps, n_items),
+        policy=policy, max_bins=max_bins, backend=backend,
+        block_events=block_events)
+    return (usage.reshape(B, S), opened.reshape(B, S),
+            overflow.reshape(B, S))
+
+
+@partial(jax.jit, static_argnames=("policy", "max_bins", "backend", "ndev",
+                                   "block_events"))
 def _simulate_batch_sharded(sizes, times, kinds, items, pdeps, dmask,
                             arrivals, rdeps, n_items, *, policy: str,
-                            max_bins: int, backend: str, ndev: int):
+                            max_bins: int, backend: str, ndev: int,
+                            block_events: int = 0):
     """Shard the flattened lane axis over ``ndev`` local devices.  L must
     be a multiple of ndev (``_run_arrays`` pads); each shard replays its
     lanes with the plain single-device computation - no collectives."""
@@ -117,7 +134,7 @@ def _simulate_batch_sharded(sizes, times, kinds, items, pdeps, dmask,
     mesh = Mesh(np.asarray(jax.local_devices()[:ndev]), ("lanes",))
     f = shard_map(
         partial(_simulate_lanes_impl, policy=policy, max_bins=max_bins,
-                backend=backend),
+                backend=backend, block_events=block_events),
         mesh=mesh, in_specs=P("lanes"), out_specs=P("lanes"),
         check_vma=False)
     return f(sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps,
@@ -125,7 +142,7 @@ def _simulate_batch_sharded(sizes, times, kinds, items, pdeps, dmask,
 
 
 def _run_arrays(arrays, *, policy: str, max_bins: int, backend: str,
-                ndev: int):
+                ndev: int, block_events: int = 0):
     """One batched run, sharded over lanes when ndev > 1.
 
     The sharded path flattens the (B, S) grid to L = B*S lanes (so seed
@@ -134,7 +151,7 @@ def _run_arrays(arrays, *, policy: str, max_bins: int, backend: str,
     lanes exist - and drops the padding rows on the way out."""
     if ndev <= 1:
         return _simulate_batch(*arrays, policy=policy, max_bins=max_bins,
-                               backend=backend)
+                               backend=backend, block_events=block_events)
     B, S, _ = arrays[4].shape
     flat = _flatten_lanes(*arrays)
     L = B * S
@@ -145,7 +162,7 @@ def _run_arrays(arrays, *, policy: str, max_bins: int, backend: str,
                      for a in flat)
     u, o, ov = _simulate_batch_sharded(*flat, policy=policy,
                                        max_bins=max_bins, backend=backend,
-                                       ndev=ndev)
+                                       ndev=ndev, block_events=block_events)
     return (u[:L].reshape(B, S), o[:L].reshape(B, S),
             ov[:L].reshape(B, S))
 
@@ -166,7 +183,7 @@ def run_batch(batch: InstanceBatch, policy: str,
               pdeps: Optional[np.ndarray] = None, max_bins: int = 64,
               max_bins_cap: int = MAX_BINS_CAP,
               auto_grow: bool = True, backend: Optional[str] = None,
-              shard: str = "auto") -> BatchRunResult:
+              shard: str = "auto", block_events: int = 0) -> BatchRunResult:
     """Replay every lane of ``batch`` under ``policy`` (any
     ``jaxsim.SCAN_POLICIES`` name, category-structured policies included).
 
@@ -178,6 +195,10 @@ def run_batch(batch: InstanceBatch, policy: str,
     Pallas kernel on TPU, inline jnp elsewhere).  ``shard``: "auto" shards
     the lane axis over all local devices when more than one is visible;
     "never" forces the single-device path; "always" asserts multi-device.
+    ``block_events`` > 1 (kernel backends only) runs the event-blocked
+    replay megakernel: blocks of that many events per invocation with the
+    carry resident on-chip.  All three are execution arguments - they
+    never change the replayed decisions.
     """
     assert known_policy(policy), f"{policy!r} is not a scan policy"
     assert shard in ("auto", "never", "always"), shard
@@ -201,7 +222,8 @@ def run_batch(batch: InstanceBatch, policy: str,
     while True:
         sub = tuple(jnp.asarray(a[lanes]) for a in arrays)
         u, o, ov = _run_arrays(sub, policy=policy, max_bins=mb,
-                               backend=backend, ndev=ndev)
+                               backend=backend, ndev=ndev,
+                               block_events=block_events)
         usage[lanes] = np.asarray(u)
         opened[lanes] = np.asarray(o)
         over[lanes] = np.asarray(ov)
@@ -216,9 +238,10 @@ def run_batch(batch: InstanceBatch, policy: str,
 def run_grid(batch: InstanceBatch, policies: Sequence[str],
              pdeps: Optional[np.ndarray] = None, max_bins: int = 64,
              max_bins_cap: int = MAX_BINS_CAP,
-             backend: Optional[str] = None,
-             shard: str = "auto") -> Dict[str, BatchRunResult]:
+             backend: Optional[str] = None, shard: str = "auto",
+             block_events: int = 0) -> Dict[str, BatchRunResult]:
     """One batched run per policy over the same instance batch."""
     return {p: run_batch(batch, p, pdeps, max_bins, max_bins_cap,
-                         backend=backend, shard=shard)
+                         backend=backend, shard=shard,
+                         block_events=block_events)
             for p in policies}

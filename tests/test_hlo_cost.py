@@ -93,3 +93,42 @@ def test_dus_aliasing_not_overcharged():
     full_per_step = 128 * 128 * 1024 * 4
     assert cost.bytes < full_per_step * 4, \
         "DUS writes must be charged at update size"
+
+
+def test_custom_call_bytes_charged_only_on_request():
+    """custom-call ops are free by default (opaque kernels model their own
+    interiors) but charge_custom_calls counts their operand+result HBM
+    boundary bytes - times the enclosing trip count (the accounting the
+    perf/replay_block_bytes_* rows rely on)."""
+    text = """
+HloModule m
+
+%cond (p: (s32[], f32[64,128])) -> pred[] {
+  %p = (s32[], f32[64,128]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv, %n), direction=LT
+}
+
+%body (p: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %p = (s32[], f32[64,128]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,128] get-tuple-element(%p), index=1
+  %y = f32[64,128] custom-call(%x), custom_call_target="my_kernel"
+  %one = s32[] constant(1)
+  %nxt = s32[] add(%iv, %one)
+  ROOT %t = (s32[], f32[64,128]) tuple(%nxt, %y)
+}
+
+ENTRY %main (a: f32[64,128]) -> f32[64,128] {
+  %a = f32[64,128] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[64,128]) tuple(%zero, %a)
+  %w = (s32[], f32[64,128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[64,128] get-tuple-element(%w), index=1
+}
+"""
+    free = module_cost(text)
+    charged = module_cost(text, charge_custom_calls=True)
+    per_call = 2 * 64 * 128 * 4            # operand + result
+    assert charged.bytes - free.bytes == pytest.approx(5 * per_call)

@@ -166,6 +166,38 @@ def test_scheduler_device_select_matches_host(policy, kwargs):
     assert host == drive("pallas_interpret")
 
 
+@pytest.mark.parametrize("policy,kwargs", [
+    ("best_fit", {"norm": "linf"}), ("nrt_prioritized", None),
+    ("cbd", {"beta": 2.0}),
+])
+def test_scheduler_select_block_matches_host(policy, kwargs):
+    """select_block=True routes the on-device decision through the
+    event-blocked replay megakernel at T=1 (one arrival event replayed on
+    a snapshot of the pool) - decision-for-decision equal to the host
+    algorithm zoo, so the sweep hot loop and serving share one kernel."""
+    caps = ReplicaCapacity(slots=4, kv_tokens=65536, prefill_budget=262144)
+
+    def drive(backend, block):
+        sched = DVBPScheduler(policy, caps, kwargs, select_backend=backend,
+                              select_block=block)
+        rng = np.random.default_rng(5)
+        live, t, picks = [], 0.0, []
+        for rid in range(60):
+            t += float(rng.integers(1, 8))
+            while live and live[0][0] <= t:
+                ft, r = live.pop(0)
+                sched.finish(r, ft)
+            req = Request(rid, t, int(rng.integers(16, 512)),
+                          int(rng.integers(8, 1024)),
+                          predicted_decode_len=int(rng.integers(8, 1024)))
+            picks.append(sched.place(req, t))
+            live.append((t + req.decode_len / 50.0, rid))
+            live.sort()
+        return picks, sched.stats.replicas_opened
+
+    assert drive("host", False) == drive("pallas_interpret", True)
+
+
 def test_fleet_objective_accounting():
     # one request -> exactly its service time of replica-seconds
     reqs = [Request(0, 0.0, 64, 500)]
