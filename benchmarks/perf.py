@@ -3,7 +3,16 @@
   * Pallas kernels (interpret mode on CPU; native on TPU) vs jnp references
   * core.jaxsim trace replay vs the Python oracle engine
   * serving fleet placement throughput
+  * the obs layer's own overhead + the jit-retrace invariant as perf rows
   * roofline summary rows from the dry-run artifacts (experiments/dryrun)
+
+Repeated timings go through ``obs.timeit`` (perf_counter, device-result
+blocking, min/median/stdev) - the spread rides each CSV row as a
+structured ``# med=..us sd=..us n=..`` comment that ``benchmarks/run.py``
+parses into the bench JSON, so host-noise (the ±60% problem of raw
+best-of-N ``time.time`` loops) is visible per row instead of silently
+folded into the minimum.  One-shot cold timings (wall clock including
+compile, by suite convention) use ``time.perf_counter`` directly.
 """
 from __future__ import annotations
 
@@ -17,13 +26,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 
-def _timeit(fn, *args, n: int = 5) -> float:
-    fn(*args)   # compile/warm
-    t0 = time.time()
-    for _ in range(n):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / n
+
+def _timeit(fn, *args, n: int = 5) -> obs.TimingStats:
+    """Shared repeated-timing helper: ``obs.timeit`` (one warmup rep for
+    compile, then ``n`` blocked perf_counter reps)."""
+    return obs.timeit(fn, *args, n=n, warmup=1)
 
 
 def kernels() -> List[str]:
@@ -34,23 +43,26 @@ def kernels() -> List[str]:
     q = jax.random.normal(key, (4, 256, 8, 64), jnp.float32)
     k = jax.random.normal(key, (4, 256, 2, 64), jnp.float32)
     v = jax.random.normal(key, (4, 256, 2, 64), jnp.float32)
-    t = _timeit(lambda: ops.flash_attention(q, k, v, impl=impl))
+    st = _timeit(lambda: ops.flash_attention(q, k, v, impl=impl))
     flops = 4 * 256 * 256 * 8 * 64 * 2 * 2 / 2
-    rows.append(f"perf/flash_attention_{impl},{t*1e6:.0f},{flops/t/1e9:.1f}")
+    rows.append(st.row(f"perf/flash_attention_{impl}",
+                       f"{flops / st.best / 1e9:.1f}"))
 
     qd = jax.random.normal(key, (8, 8, 64))
     kd = jax.random.normal(key, (8, 4096, 2, 64))
     vd = jax.random.normal(key, (8, 4096, 2, 64))
     kl = jnp.full((8,), 4096, jnp.int32)
-    t = _timeit(lambda: ops.decode_attention(qd, kd, vd, kl, impl=impl))
+    st = _timeit(lambda: ops.decode_attention(qd, kd, vd, kl, impl=impl))
     gb = 8 * 4096 * 2 * 64 * 4 * 2 / 1e9
-    rows.append(f"perf/decode_attention_{impl},{t*1e6:.0f},{gb/t:.1f}")
+    rows.append(st.row(f"perf/decode_attention_{impl}",
+                       f"{gb / st.best:.1f}"))
 
     rem = jnp.asarray(np.random.default_rng(0).random((4096, 5)))
     alive = jnp.ones(4096, bool)
     item = jnp.asarray(np.random.default_rng(1).random(5) * 0.3)
-    t = _timeit(lambda: ops.fitscore(rem, alive, item, impl=impl))
-    rows.append(f"perf/fitscore_4096bins_{impl},{t*1e6:.0f},{4096/t/1e6:.2f}")
+    st = _timeit(lambda: ops.fitscore(rem, alive, item, impl=impl))
+    rows.append(st.row(f"perf/fitscore_4096bins_{impl}",
+                       f"{4096 / st.best / 1e6:.2f}"))
     return rows
 
 
@@ -79,14 +91,16 @@ def fitscore_step(lanes: int = 8, n_slots: int = 4096,
     policy = "best_fit_linf"
 
     jnp_fn = jax.jit(lambda *a: jax.vmap(partial(_select_slot, policy))(*a))
-    t_j = _timeit(lambda: jnp_fn(*args))
+    st_j = _timeit(lambda: jnp_fn(*args))
     interpret = jax.default_backend() != "tpu"
     pal_fn = jax.jit(lambda *a: fitscore_select_batch(
         *a, policy=policy, interpret=interpret))
-    t_p = _timeit(lambda: pal_fn(*args))
+    st_p = _timeit(lambda: pal_fn(*args))
     per_us = lanes * n_slots / 1e6
-    return [f"perf/fitscore_step_jnp,{t_j*1e6:.0f},{per_us/t_j:.2f}",
-            f"perf/fitscore_step_pallas,{t_p*1e6:.0f},{per_us/t_p:.2f}"]
+    return [st_j.row("perf/fitscore_step_jnp",
+                     f"{per_us / st_j.best:.2f}"),
+            st_p.row("perf/fitscore_step_pallas",
+                     f"{per_us / st_p.best:.2f}")]
 
 
 def replay_carry(lanes: int = 8, n_slots: int = 2048,
@@ -138,13 +152,14 @@ def replay_carry(lanes: int = 8, n_slots: int = 2048,
     sel = jax.jit(select_padded)
     repad = jax.jit(lambda *a: select_padded(*pad_state(*a)))
     compact = (loads, counts, oseq, closes, size)
-    t_repad = _timeit(lambda: repad(*compact))
+    st_repad = _timeit(lambda: repad(*compact))
     padded = jax.block_until_ready(pad_state(*compact))
-    t_padded = _timeit(lambda: sel(*padded))
+    st_padded = _timeit(lambda: sel(*padded))
     gb = lanes * Np * (dpad + 3) * 4 / 1e9   # padded state written per step
-    return [f"perf/replay_carry_repad,{t_repad*1e6:.0f},{gb/t_repad:.2f}",
-            f"perf/replay_carry_padded,{t_padded*1e6:.0f},"
-            f"{t_repad/t_padded:.2f}"]
+    return [st_repad.row("perf/replay_carry_repad",
+                         f"{gb / st_repad.best:.2f}"),
+            st_padded.row("perf/replay_carry_padded",
+                          f"{st_repad.best / st_padded.best:.2f}")]
 
 
 def _quantized_suite(lanes: int, n_items: int, d: int, seed: int = 0):
@@ -175,21 +190,20 @@ def replay_block(lanes: int = 4, n_items: int = 120, d: int = 3,
     batch = pack_instances(_quantized_suite(lanes, n_items, d))
     be = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
     E = 2 * batch.n_max
-    t_step, usage = {}, {}
+    stats, usage = {}, {}
     for T in (1,) + tuple(blocks):
         kw = dict(max_bins=64, backend=be, block_events=T)
-        run_batch(batch, "best_fit_linf", **kw)           # compile/warm
-        reps = []
-        for _ in range(3):    # best-of-3: min() discards contended reps
-            t0 = time.time()
-            r = run_batch(batch, "best_fit_linf", **kw)
-            reps.append(time.time() - t0)
-        t_step[T] = min(reps) / E
-        usage[T] = float(r.usage_time.sum())
+        usage[T] = float(run_batch(batch, "best_fit_linf", **kw)
+                         .usage_time.sum())          # compile/warm
+        # best-of-3 (min() discards contended reps), med/sd on the row
+        stats[T] = obs.timeit(
+            lambda: run_batch(batch, "best_fit_linf", **kw), n=3, warmup=0)
     assert len(set(usage.values())) == 1, usage
-    rows = [f"perf/replay_block_T=1,{t_step[1]*1e6:.1f},1.00"]
-    rows += [f"perf/replay_block_T={T},{t_step[T]*1e6:.1f},"
-             f"{t_step[1]/t_step[T]:.2f}" for T in blocks]
+    t_step = {T: st.best / E for T, st in stats.items()}
+    rows = [stats[1].row("perf/replay_block_T=1", "1.00", scale=1 / E)]
+    rows += [stats[T].row(f"perf/replay_block_T={T}",
+                          f"{t_step[1] / t_step[T]:.2f}", scale=1 / E)
+             for T in blocks]
     return rows
 
 
@@ -260,27 +274,27 @@ def sweep_categories(n_instances: int = 28, n_items: int = 250,
     preds = [lognormal_predictions_batch(i, 1.0, seeds) for i in insts]
     n_runs = n_instances * len(seeds) * len(policies)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     loop_usage = 0.0
     for p in policies:
         for inst, pr in zip(insts, preds):
             for s in range(len(seeds)):
                 loop_usage += run(inst, host_algorithm(p),
                                   predicted_durations=pr[s]).usage_time
-    t_loop = time.time() - t0
+    t_loop = time.perf_counter() - t0
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     batch = pack_instances(insts)
     pdeps = pad_predictions(batch, preds)
     batch_usage = 0.0
     for p in policies:
         batch_usage += float(run_batch(batch, p, pdeps, max_bins=64)
                              .usage_time.sum())
-    t_cold = time.time() - t0
-    t0 = time.time()
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
     for p in policies:
         run_batch(batch, p, pdeps, max_bins=64)
-    t_warm = time.time() - t0
+    t_warm = time.perf_counter() - t0
 
     tag = f"{n_instances}x{len(policies)}"
     return [f"perf/sweep_categories_loop_{tag},{t_loop/n_runs*1e6:.0f},"
@@ -321,12 +335,8 @@ def api_facade(n_instances: int = 28, n_items: int = 250,
     # min() discards contended reps, so the ratio isolates the facade cost
     td, tf = [], []
     for _ in range(3):
-        t0 = time.time()
-        direct()
-        td.append(time.time() - t0)
-        t0 = time.time()
-        facade()
-        tf.append(time.time() - t0)
+        td.append(obs.timeit(direct, n=1, warmup=0).best)
+        tf.append(obs.timeit(facade, n=1, warmup=0).best)
     t_direct, t_facade = min(td), min(tf)
     n_runs = n_instances * len(policies)
     tag = f"{n_instances}x{len(policies)}"
@@ -345,14 +355,112 @@ def sweep_batched_only(n_instances: int = 28, n_items: int = 250,
     insts = make_azure_like_suite(n_instances=n_instances, n_items=n_items,
                                   seed=11)
     n_runs = n_instances * len(policies)
-    t0 = time.time()
+    t0 = time.perf_counter()
     batch = pack_instances(insts)
     usage = sum(float(run_batch(batch, p, max_bins=64).usage_time.sum())
                 for p in policies)
-    t_batch = time.time() - t0
+    t_batch = time.perf_counter() - t0
     tag = f"{n_instances}x{len(policies)}"
     return [f"perf/sweep_batched_{tag},{t_batch/n_runs*1e6:.0f},"
             f"{usage:.0f}"]
+
+
+def obs_overhead(n_instances: int = 28, n_items: int = 250,
+                 policies=("first_fit", "best_fit_l2", "greedy",
+                           "nrt_prioritized")) -> List[str]:
+    """The obs layer's own cost on the CI-gate sweep (sweep_batched_28x4):
+
+      * **disabled-mode overhead** - microbench the two disabled-mode
+        primitives (a ``span()`` returning the shared no-op object, one
+        ``counter_add`` dict upsert), count how many of each one warm sweep
+        actually executes, and bound the instrumented-but-disabled cost as
+        a fraction of the warm sweep wall clock.  Asserted < 2% (the
+        tentpole budget); rides the row as the derived column.
+      * **results invariance** - per-policy usage vectors must be
+        bit-identical with spans enabled and with ``trace_level=1``
+        (decision traces are extra scan *outputs*, never inputs).
+    """
+    from repro.data import make_azure_like_suite
+    from repro.sweep import pack_instances, run_batch
+    insts = make_azure_like_suite(n_instances=n_instances, n_items=n_items,
+                                  seed=11)
+    batch = pack_instances(insts)
+
+    def sweep():
+        return [np.asarray(run_batch(batch, p, max_bins=64).usage_time)
+                for p in policies]
+
+    u_warm = sweep()                               # warm compile
+    # per-call cost of the disabled-mode primitives
+    prev = obs.enabled()
+    obs.enable(False)
+    k = 100_000
+    t0 = time.perf_counter()
+    for _ in range(k):
+        with obs.span("perf.calib"):
+            pass
+    t_span = (time.perf_counter() - t0) / k
+    t0 = time.perf_counter()
+    for _ in range(k):
+        obs.counter_add("perf.calib")
+    t_ctr = (time.perf_counter() - t0) / k
+    obs.counter_add("perf.calib", -k)              # net the calibration out
+    # how many instrumented call sites one warm sweep actually crosses
+    # (delta-counted, so any ambient recording session keeps its events)
+    with obs.recording(clear=False):
+        ev0, c0 = len(obs.events()), obs.counter_ops()
+        u_on = sweep()
+        n_spans = len(obs.events()) - ev0
+        n_ctrs = obs.counter_ops() - c0
+    for a, b in zip(u_warm, u_on):
+        assert (a == b).all(), "enabling spans must not change results"
+    u_tr = [np.asarray(run_batch(batch, p, max_bins=64, trace_level=1)
+                       .usage_time) for p in policies]
+    for a, b in zip(u_warm, u_tr):
+        assert (a == b).all(), "trace_level must not change decisions"
+    st = obs.timeit(sweep, n=3, warmup=0)
+    obs.enable(prev)
+    frac = (n_spans * t_span + n_ctrs * t_ctr) / st.best
+    assert frac < 0.02, \
+        f"disabled-mode obs overhead {frac:.4f} exceeds the 2% budget " \
+        f"({n_spans} spans @ {t_span*1e9:.0f}ns, " \
+        f"{n_ctrs} counters @ {t_ctr*1e9:.0f}ns)"
+    tag = f"{n_instances}x{len(policies)}"
+    return [st.row(f"perf/obs_overhead_{tag}", f"{frac:.5f}")]
+
+
+def sweep_retrace(n_items: int = 30, d: int = 3) -> List[str]:
+    """The PR-5 one-trace-per-geometry fix as a monitored perf invariant:
+    after warming a 6-instance x 2-prediction-row grid, running the same
+    padded geometry as 12 x 1 lanes (and the 6 x 2 cell again) must be a
+    pure jit-cache hit.  Middle column: warm wall clock for the two grids;
+    derived column: the ``sweep.jit_trace`` counter delta - CI gates on 0
+    (``benchmarks/run.py --check``)."""
+    from repro.sweep import pack_instances, pad_predictions, run_batch
+    i6 = [quantized_instance(40 + k) for k in range(6)]
+    i12 = [quantized_instance(60 + k) for k in range(12)]
+    b6 = pack_instances(i6)
+    p6 = pad_predictions(
+        b6, [np.stack([i.durations, 2.0 * i.durations]) for i in i6])
+    b12 = pack_instances(i12)
+    run_batch(b6, "greedy", p6, max_bins=64)       # warm: one trace
+    before = obs.counter_get("sweep.jit_trace")
+    st = obs.timeit(lambda: (run_batch(b12, "greedy", max_bins=64),
+                             run_batch(b6, "greedy", p6, max_bins=64)),
+                    n=3, warmup=0)
+    retraces = obs.counter_get("sweep.jit_trace") - before
+    return [st.row("perf/sweep_retrace_6x2v12x1", f"{retraces:.0f}")]
+
+
+def quantized_instance(seed: int, n: int = 30, d: int = 3):
+    """A single fp32-exact instance (1/64-grid sizes, integer times) - the
+    same shape family the blocked-replay parity tests use."""
+    from repro.core import Instance
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 24, (n, d)) / 64.0
+    arr = np.sort(rng.integers(0, 50000, n)).astype(float)
+    dur = rng.integers(10, 5000, n).astype(float)
+    return Instance(sizes, arr, arr + dur, f"q{seed}").sorted_by_arrival()
 
 
 _SHARDED_BENCH = """
@@ -364,10 +472,10 @@ insts = make_azure_like_suite(n_instances=28, n_items=250, seed=11)
 batch = pack_instances(insts)
 policies = ("first_fit", "best_fit_l2", "greedy", "nrt_prioritized")
 for shard in ("never", "always"):
-    t0 = time.time()
+    t0 = time.perf_counter()
     usage = sum(float(run_batch(batch, p, max_bins=64, shard=shard)
                       .usage_time.sum()) for p in policies)
-    print(f"{shard},{time.time() - t0},{usage}")
+    print(f"{shard},{time.perf_counter() - t0},{usage}")
 """
 
 
@@ -405,13 +513,13 @@ def jaxsim_vs_oracle() -> List[str]:
     from repro.core.jaxsim import simulate
     from repro.data import make_azure_like_suite
     inst = make_azure_like_suite(n_instances=1, n_items=2000)[0]
-    t0 = time.time()
+    t0 = time.perf_counter()
     r = run(inst, get_algorithm("first_fit"))
-    t_or = time.time() - t0
+    t_or = time.perf_counter() - t0
     simulate(inst, "first_fit", max_bins=r.peak_open_bins + 8)   # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     j = simulate(inst, "first_fit", max_bins=r.peak_open_bins + 8)
-    t_jx = time.time() - t0
+    t_jx = time.perf_counter() - t0
     rows = [f"perf/oracle_engine_2k_items,{t_or*1e6:.0f},{r.usage_time:.0f}",
             f"perf/jaxsim_2k_items,{t_jx*1e6:.0f},{j.usage_time:.0f}"]
     return rows
@@ -432,20 +540,20 @@ def sweep_grid(n_instances: int = 28, n_items: int = 250,
                                   seed=11)
     grid = n_runs = n_instances * len(policies)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     loop_usage = 0.0
     for p in policies:
         for inst in insts:
             loop_usage += simulate(inst, p, max_bins=64).usage_time
-    t_loop = time.time() - t0
+    t_loop = time.perf_counter() - t0
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     batch = pack_instances(insts)
     batch_usage = 0.0
     for p in policies:
         batch_usage += float(run_batch(batch, p, max_bins=64)
                              .usage_time.sum())
-    t_batch = time.time() - t0
+    t_batch = time.perf_counter() - t0
 
     tag = f"{n_instances}x{len(policies)}"
     return [f"perf/sweep_loop_{tag},{t_loop/n_runs*1e6:.0f},{loop_usage:.0f}",
@@ -461,9 +569,9 @@ def serving_fleet() -> List[str]:
     reqs = attach_predictions(synth_requests(2000), sigma=0.5)
     rows = []
     for pol in ["round_robin", "first_fit", "greedy", "nrt_prioritized"]:
-        t0 = time.time()
+        t0 = time.perf_counter()
         r = simulate_fleet(reqs, pol)
-        rows.append(f"perf/fleet_{pol},{(time.time()-t0)*1e6:.0f},"
+        rows.append(f"perf/fleet_{pol},{(time.perf_counter()-t0)*1e6:.0f},"
                     f"{r['replica_seconds']:.0f}")
     return rows
 

@@ -9,29 +9,44 @@
 # --fast: smoke mode (small suites, a figure subset, a small sweep grid) -
 #   used by tests/test_benchmarks_smoke.py to keep the benches runnable.
 # --json PATH: also emit every row as machine-readable JSON
-#   [{"name", "us_per_call", "derived"}, ...] so the perf trajectory can be
-#   tracked across PRs (see BENCH_sweep.json at the repo root).
+#   [{"name", "us_per_call", "derived"}, ...] plus the run's obs counter
+#   snapshot, so the perf trajectory can be tracked across PRs (see
+#   BENCH_sweep.json at the repo root).  A JSONL obs run log (spans +
+#   counters, ``repro.obs.export_jsonl``) is written next to it as
+#   PATH-with-.obs.jsonl - the per-SHA CI artifact; inspect with
+#   ``python -m repro obs``.
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import re
 import sys
 import time
 
 FAST_FIGURES = ("fig2", "fig5")
 
+# the spread comment obs.TimingStats.row() appends to repeated-timing rows
+_SPREAD_RE = re.compile(
+    r"med=(?P<med>[\d.]+)us\s+sd=(?P<sd>[\d.]+)us\s+n=(?P<n>\d+)")
+
 
 def _parse_row(line: str):
-    head = line.split("#", 1)[0].strip().rstrip(",")
+    head, _, comment = line.partition("#")
+    head = head.strip().rstrip(",")
     parts = head.split(",")
     if len(parts) != 3:
         return None
     try:
-        return {"name": parts[0], "us_per_call": float(parts[1]),
-                "derived": float(parts[2])}
+        row = {"name": parts[0], "us_per_call": float(parts[1]),
+               "derived": float(parts[2])}
     except ValueError:
         return None
+    m = _SPREAD_RE.search(comment)
+    if m:   # obs.timeit rows carry their spread as a structured comment
+        row.update(median_us=float(m.group("med")),
+                   stdev_us=float(m.group("sd")), reps=int(m.group("n")))
+    return row
 
 
 def main(argv=None) -> None:
@@ -47,6 +62,12 @@ def main(argv=None) -> None:
         os.environ.setdefault("BENCH_INSTANCES", "4")
         os.environ.setdefault("BENCH_ITEMS", "300")
         os.environ.setdefault("BENCH_REPEATS", "1")
+
+    from repro import obs
+    if args.json:
+        # record spans for the run log riding next to the JSON artifact
+        obs.reset(counters_too=False)
+        obs.enable()
 
     rows = []
 
@@ -75,6 +96,7 @@ def main(argv=None) -> None:
         # the headline sweep timing (which includes compilation).
         groups = [perf.kernels, perf.jaxsim_vs_oracle, perf.serving_fleet,
                   perf.sweep_grid, perf.api_facade, perf.sweep_categories,
+                  perf.obs_overhead, perf.sweep_retrace,
                   perf.replay_carry, perf.fitscore_step, perf.replay_block,
                   perf.replay_block_bytes, perf.sweep_sharded,
                   perf.roofline_summary]
@@ -89,6 +111,8 @@ def main(argv=None) -> None:
                       # same grid/policies as sweep_batched_only, so the
                       # full-size facade row rides its compile cache
                       perf.api_facade,
+                      # ... as do the obs-overhead and retrace-gate rows
+                      perf.obs_overhead, perf.sweep_retrace,
                       lambda: perf.sweep_categories(n_instances=6,
                                                     n_items=120,
                                                     policies=("cbd",
@@ -110,13 +134,20 @@ def main(argv=None) -> None:
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
     if args.json:
+        counters = obs.counters()
         with open(args.json, "w") as f:
             json.dump({"rows": rows,
+                       "counters": counters,
                        "env": {k: os.environ[k] for k in
                                ("BENCH_INSTANCES", "BENCH_ITEMS",
                                 "BENCH_REPEATS") if k in os.environ}},
                       f, indent=1)
         print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
+        log = os.path.splitext(args.json)[0] + ".obs.jsonl"
+        obs.export_jsonl(log, obs.events(), counters,
+                         meta={"tool": "benchmarks.run",
+                               "fast": bool(args.fast), "n_rows": len(rows)})
+        print(f"# wrote obs run log to {log}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -10,10 +10,13 @@ Subcommands:
     fleet baselines.
   * ``bench`` - the benchmark harness (``benchmarks.run``; requires the
     repo root on sys.path, i.e. run from a checkout).
+  * ``obs`` - summarize a JSONL observability run log (spans + counters),
+    optionally converting it to Chrome/Perfetto trace_event JSON.
 
     PYTHONPATH=src python -m repro sweep --suites azure --n-instances 12
     PYTHONPATH=src python -m repro serve --requests 2000 --sigma 0.5
     PYTHONPATH=src python -m repro bench --fast
+    PYTHONPATH=src python -m repro obs run.obs.jsonl --perfetto trace.json
 """
 from __future__ import annotations
 
@@ -103,14 +106,17 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
         description=__doc__.splitlines()[0],
-        usage="python -m repro {sweep,serve,bench} ...")
-    ap.add_argument("command", choices=["sweep", "serve", "bench"])
+        usage="python -m repro {sweep,serve,bench,obs} ...")
+    ap.add_argument("command", choices=["sweep", "serve", "bench", "obs"])
     args, rest = ap.parse_known_args(argv)
     if args.command == "sweep":
         from .sweep.__main__ import main as sweep_main
         sweep_main(rest)
     elif args.command == "serve":
         _serve(rest)
+    elif args.command == "obs":
+        from .obs.cli import main as obs_main
+        obs_main(rest)
     else:
         _bench(rest)
 

@@ -26,7 +26,9 @@ import dataclasses
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from .. import obs
 from ..core.metrics import BoxStats
+from ..obs.trace import ReplayTrace
 from ..sweep.grid import SweepSpec, run_sweep, summarize_sweep
 from ..sweep.store import SweepStore
 from .policy import Policy
@@ -42,11 +44,19 @@ class Results:
     ``records`` keeps the legacy ``result_key`` -> record mapping (the
     sweep-store schema); ``rows()`` returns the tidy per-record view with
     explicit ``workload`` / ``setting`` columns; ``summary()`` aggregates
-    Eq. (1) ratios into box stats per (workload, policy, setting)."""
+    Eq. (1) ratios into box stats per (workload, policy, setting).
+
+    ``metrics`` is the obs-counter delta of the producing ``run()`` (cache
+    hits/misses, jit retraces, device-transfer bytes, ... - see the
+    glossary in sweep/README.md); ``traces`` maps ``result_key`` ->
+    single-lane ``obs.ReplayTrace`` when the run asked for
+    ``trace_level >= 1``."""
 
     records: Dict[str, Dict]
     _workload_by_suite: Dict[str, str]
     _setting_by_pred: Dict[Tuple[str, str], str]
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    traces: Dict[str, ReplayTrace] = dataclasses.field(default_factory=dict)
 
     def rows(self) -> List[Dict]:
         out = []
@@ -92,6 +102,9 @@ class Results:
         self.records.update(other.records)
         self._workload_by_suite.update(other._workload_by_suite)
         self._setting_by_pred.update(other._setting_by_pred)
+        for k, v in other.metrics.items():
+            self.metrics[k] = self.metrics.get(k, 0) + v
+        self.traces.update(other.traces)
         return self
 
 
@@ -171,34 +184,50 @@ class Experiment:
     def run(self, store: Union[None, str, SweepStore] = None,
             force: bool = False, progress=None,
             backend: Optional[str] = None, shard: str = "auto",
-            block_events: int = 0) -> Results:
+            block_events: int = 0, trace_level: int = 0) -> Results:
         """Run (or resolve from the store) every cell of the grid.
 
         ``store``: a ``SweepStore``, a directory path, or None (no
         persistence).  ``backend`` / ``shard`` / ``block_events`` pick the
         replay engine, lane sharding and event-block size exactly as in
         ``run_batch`` - execution arguments, never part of the cached
-        identity."""
+        identity.  ``trace_level`` >= 1 replays every cell with per-event
+        decision traces captured into ``Results.traces`` (cells recompute
+        even when cached - the trace only exists by replaying).
+
+        The returned ``Results.metrics`` holds the obs-counter deltas of
+        this call (always on - no ``obs.enable()`` needed)."""
         if isinstance(store, str):
             store = SweepStore(store)
         res = Results({}, {}, {})
         polnames = {p.name for p in self.policies}
-        for spec, wls in self._spec_groups():
-            records = run_sweep(spec, store=store, force=force,
-                                progress=progress, backend=backend,
-                                shard=shard, block_events=block_events)
-            # run_sweep returns everything the shared store file holds for
-            # these suites; Results only reports THIS experiment's cells
-            suites = {wl.suite().label() for wl in wls}
-            preds = {p.label() for p in spec.predictions}
-            records = {k: r for k, r in records.items()
-                       if r["suite"] in suites and r["policy"] in polnames
-                       and r["pred"] in preds and r["seed"] in self.seeds}
-            res.merge(Results(
-                records,
-                {wl.suite().label(): wl.label() for wl in wls},
-                {(wl.suite().label(), wl.pred_model(s).label()): s.label()
-                 for wl in wls for s in self.settings}))
+        counters0 = obs.counters()
+        with obs.span("experiment.run", cells=len(self.workloads) *
+                      len(self.policies) * len(self.settings)):
+            for spec, wls in self._spec_groups():
+                traces: Dict[str, ReplayTrace] = {}
+                records = run_sweep(spec, store=store, force=force,
+                                    progress=progress, backend=backend,
+                                    shard=shard, block_events=block_events,
+                                    trace_level=trace_level, traces=traces)
+                # run_sweep returns everything the shared store file holds
+                # for these suites; Results only reports THIS experiment's
+                # cells
+                suites = {wl.suite().label() for wl in wls}
+                preds = {p.label() for p in spec.predictions}
+                keep = lambda r: (r["suite"] in suites
+                                  and r["policy"] in polnames
+                                  and r["pred"] in preds
+                                  and r["seed"] in self.seeds)
+                records = {k: r for k, r in records.items() if keep(r)}
+                res.merge(Results(
+                    records,
+                    {wl.suite().label(): wl.label() for wl in wls},
+                    {(wl.suite().label(), wl.pred_model(s).label()):
+                     s.label() for wl in wls for s in self.settings},
+                    traces={k: t for k, t in traces.items()
+                            if k in records}))
+        res.metrics = obs.counter_deltas(counters0)
         return res
 
 

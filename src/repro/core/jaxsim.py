@@ -559,7 +559,8 @@ def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
 
 def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
                   rdeps=None, n_items=None, *, policy: str, max_bins: int,
-                  backend: str = "jnp", block_events: int = 0):
+                  backend: str = "jnp", block_events: int = 0,
+                  trace_level: int = 0):
     """``L`` lanes' event replays in lockstep: one scan over the event
     *index* whose step processes every lane at once, so the arrival scoring
     is a single (L, slots, d) op - on TPU the fused
@@ -574,6 +575,12 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
     departure errors (see ``_category_setup``).
 
     Returns (usage (L,), opened (L,), placements (L, n_max), overflow (L,)).
+    With ``trace_level >= 1`` a fifth element is appended: a dict of
+    stacked per-event series (each ``(L, 2 n_max, ...)``) - the chosen /
+    freed slot, post-event open-bin count, per-dim aggregate load,
+    category tag of the touched slot and running usage (``trace_level >= 2``
+    adds the full per-slot alive mask).  ``trace_level=0`` is literally
+    the pre-trace code path (``ys=None``): bit-identical outputs.
 
     ``backend="jnp"`` selects with the inline vmapped ``_select_slot`` on a
     compact (max_bins, d) carry; "pallas"/"pallas_interpret" run the kernel
@@ -581,7 +588,8 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
     padded (Np, dpad) kernel layout (padded once here, not per step).
     """
     kernel_layout = backend != "jnp"
-    if kernel_layout and block_events and block_events > 1:
+    if kernel_layout and block_events and block_events > 1 and \
+            not trace_level:
         # event-blocked megakernel: whole T-event blocks on-chip, carry
         # written back to HBM once per block (kernel backends only; the
         # per-event jnp scan below stays the bit-exact reference)
@@ -845,7 +853,23 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
               overflow), cat_dep))
         # padded events are no-ops: the carry passes through untouched
         carry = pick(is_pad, carry, new)
-        return carry, None
+        if not trace_level:
+            return carry, None
+        # trace emission: the post-event state, as stacked scan outputs
+        # (device-side tensors - the host collector never runs in here)
+        core_n, cat_n = carry
+        ev_slot = jnp.where(is_pad, -1,
+                            jnp.where(is_arr, b, b_dep)).astype(i32)
+        tag_n = cat_n["tag"][lanes, jnp.maximum(ev_slot, 0)] \
+            if "tag" in cat_n else jnp.full((L,), -1, i32)
+        ys = {"slot": ev_slot,
+              "open_bins": core_n[2].sum(axis=1).astype(i32),
+              "load": core_n[0].sum(axis=1)[:, :d].astype(jnp.float32),
+              "tag": jnp.where(ev_slot >= 0, tag_n, -1).astype(i32),
+              "usage": core_n[8].astype(jnp.float32)}
+        if trace_level >= 2:
+            ys["alive"] = core_n[2]
+        return carry, ys
 
     core0 = (jnp.zeros((L, Np, dpad)), jnp.zeros((L, Np), i32),
              jnp.zeros((L, Np), bool),
@@ -857,8 +881,12 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
              jnp.zeros(L, bool))
     xs = tuple(jnp.swapaxes(a, 0, 1)
                for a in (times, kinds, items) + xs_extra)
-    (core, _cat), _ = jax.lax.scan(step, (core0, cat0), xs)
-    return core[8], core[10], core[7], core[11]
+    (core, _cat), ys = jax.lax.scan(step, (core0, cat0), xs)
+    out = (core[8], core[10], core[7], core[11])
+    if trace_level:
+        # scan stacks along the leading (event) axis; traces are (L, E, .)
+        return out + ({k: jnp.swapaxes(v, 0, 1) for k, v in ys.items()},)
+    return out
 
 
 @partial(jax.jit, static_argnames=("policy", "max_bins", "backend",

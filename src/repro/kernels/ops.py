@@ -28,6 +28,22 @@ def _use_pallas(impl: str) -> bool:
     return False
 
 
+def resolved_select_impl(impl: str, block: bool = False) -> str:
+    """The engine that will *actually* serve a ``fitscore_select`` /
+    ``fitscore_select_block`` call with this ``impl`` argument: "pallas"
+    (native kernel), "pallas_interpret" (kernel body interpreted) or "jnp"
+    (the ``_select_slot`` twin).  ``impl="auto"`` silently falls back to
+    jnp off-TPU - and the blocked select has no jnp twin, so it runs the
+    kernel in interpret mode instead.  Surfacing the resolved name (the
+    serving scheduler's span backend tag, ``obs`` counter suffix) makes
+    that fallback visible instead of just slow."""
+    if _use_pallas(impl):
+        return "pallas"
+    if impl == "pallas_interpret" or block:
+        return "pallas_interpret"
+    return "jnp"
+
+
 @partial(jax.jit, static_argnames=("causal", "window", "impl"))
 def flash_attention(q, k, v, *, causal=True, window=0, impl="auto"):
     if _use_pallas(impl):

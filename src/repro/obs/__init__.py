@@ -1,0 +1,32 @@
+"""repro.obs - spans, counters and replay decision traces.
+
+One observability layer for every execution path: host-side **spans**
+(wall-clock intervals, Chrome ``trace_event`` shaped) and always-on
+**counters** from the collector; per-event **replay traces** emitted by
+the batched scan itself (``trace_level`` on ``run_batch`` /
+``Experiment.run``); JSONL / Perfetto **exporters** plus the
+``jax.profiler`` hook; and ``python -m repro obs`` to summarize a run log.
+
+Span-name and counter glossaries live in ``sweep/README.md``.  The rules:
+counters are always on (single dict upsert); spans are recorded only
+under ``obs.enable()`` / ``obs.recording()`` / env ``REPRO_OBS=1`` and
+must stay outside jitted computations (a traced body runs once, at trace
+time).  Per-event device data never goes through the collector - it rides
+out of the scan as stacked outputs (``ReplayTrace``).
+"""
+from .collector import (Span, TimingStats, annotate, counter_add,
+                        counter_deltas, counter_get, counter_ops, counters,
+                        disable, enable, enabled, events, recording, reset,
+                        span, timeit, traced)
+from .export import (chrome_trace_events, export_jsonl, export_perfetto,
+                     jax_profile, read_jsonl, summarize)
+from .trace import (ReplayTrace, TraceDivergence, diff_traces, from_scan)
+
+__all__ = [
+    "Span", "TimingStats", "annotate", "counter_add", "counter_deltas",
+    "counter_get", "counter_ops", "counters", "disable", "enable",
+    "enabled", "events", "recording", "reset", "span", "timeit", "traced",
+    "chrome_trace_events", "export_jsonl", "export_perfetto", "jax_profile",
+    "read_jsonl", "summarize",
+    "ReplayTrace", "TraceDivergence", "diff_traces", "from_scan",
+]

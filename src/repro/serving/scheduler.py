@@ -29,6 +29,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from .. import obs
 from ..core.bins import BinPool
 from ..core.types import Arrival
 from ..core.algorithms import get_algorithm
@@ -118,6 +119,7 @@ class DVBPScheduler:
             departures = np.zeros(0)
         self.alg.bind(self.pool, _Inst())
         self.stats = PlacementStats()
+        self.last_select_backend: Optional[str] = None  # set by place()
         self._open_at: Dict[int, float] = {}
         self._active: Dict[int, tuple] = {}   # rid -> (bin idx, size)
         self.placements: Dict[int, int] = {}
@@ -191,14 +193,28 @@ class DVBPScheduler:
             pdur = req.predicted_decode_len / self.tps
         pdep = None if pdur is None else now + pdur
         arr = Arrival(req.rid, size, now, pdep)
+        # span backend tag: the engine that ACTUALLY decides - "host" for
+        # the numpy algorithm zoo, else the kernel impl the select resolves
+        # to ("auto" silently falls back to jnp off-TPU; the tag and the
+        # serving.select_<backend> counter make that visible)
         if self.select_backend != "host":
-            cat = self._request_category(pdep, now)
-            idx = self._select_device(size, pdep, now, cat)
-            if cat is not None:
-                self.alg._cat = cat   # keep the host class's tag
-                #                       bookkeeping (on_placed) in sync
+            from ..kernels.ops import resolved_select_impl
+            tag = resolved_select_impl(self.select_backend,
+                                       block=self.select_block)
         else:
-            idx = self.alg.select_bin(arr)
+            tag = "host"
+        self.last_select_backend = tag
+        obs.counter_add(f"serving.select_{tag}")
+        with obs.span("serving.select", policy=self._policy, backend=tag,
+                      rid=req.rid):
+            if self.select_backend != "host":
+                cat = self._request_category(pdep, now)
+                idx = self._select_device(size, pdep, now, cat)
+                if cat is not None:
+                    self.alg._cat = cat   # keep the host class's tag
+                    #                       bookkeeping (on_placed) in sync
+            else:
+                idx = self.alg.select_bin(arr)
         opened = idx < 0
         if opened:
             idx = self.pool.open_bin(now)

@@ -28,6 +28,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.jaxsim import PAD_KIND, event_sequence
 from ..core.types import Instance
 
@@ -39,12 +40,13 @@ from ..core.types import Instance
 # *content* key, so it hits even when the instances arrive via different
 # suite specs.  LRU bounded by entry count AND total bytes (uncapped
 # azure_trace instances hold ~MBs of event arrays each - an entry-count
-# bound alone could pin GBs for the process lifetime).  ``_EVSEQ_STATS``
-# is test/debug introspection.
+# bound alone could pin GBs for the process lifetime).  Hit/miss/byte
+# stats live on the obs counter registry (``pack.evseq_hit`` /
+# ``pack.evseq_miss`` / ``pack.evseq_bytes``) - the byte gauge doubles as
+# the eviction bound, so the counters are the single definition site.
 _EVSEQ_CACHE: "OrderedDict[str, Tuple]" = OrderedDict()
 _EVSEQ_CACHE_MAX = 4096
 _EVSEQ_CACHE_MAX_BYTES = 256 * 1024 * 1024
-_EVSEQ_STATS = {"hits": 0, "misses": 0, "bytes": 0}
 
 
 def _evseq_nbytes(val) -> int:
@@ -68,17 +70,17 @@ def event_sequence_cached(inst: Instance):
     hit = _EVSEQ_CACHE.get(key)
     if hit is not None:
         _EVSEQ_CACHE.move_to_end(key)
-        _EVSEQ_STATS["hits"] += 1
+        obs.counter_add("pack.evseq_hit")
         return hit
-    _EVSEQ_STATS["misses"] += 1
+    obs.counter_add("pack.evseq_miss")
     val = event_sequence(inst)
     _EVSEQ_CACHE[key] = val
-    _EVSEQ_STATS["bytes"] += _evseq_nbytes(val)
+    obs.counter_add("pack.evseq_bytes", _evseq_nbytes(val))
     while len(_EVSEQ_CACHE) > _EVSEQ_CACHE_MAX or \
-            (_EVSEQ_STATS["bytes"] > _EVSEQ_CACHE_MAX_BYTES and
-             len(_EVSEQ_CACHE) > 1):
+            (obs.counter_get("pack.evseq_bytes") > _EVSEQ_CACHE_MAX_BYTES
+             and len(_EVSEQ_CACHE) > 1):
         _, old = _EVSEQ_CACHE.popitem(last=False)
-        _EVSEQ_STATS["bytes"] -= _evseq_nbytes(old)
+        obs.counter_add("pack.evseq_bytes", -_evseq_nbytes(old))
     return val
 
 
@@ -111,6 +113,11 @@ class InstanceBatch:
 
 def pack_instances(instances: Sequence[Instance]) -> InstanceBatch:
     assert len(instances) > 0, "cannot pack an empty instance list"
+    with obs.span("pack.instances", B=len(instances)):
+        return _pack_instances(instances)
+
+
+def _pack_instances(instances: Sequence[Instance]) -> InstanceBatch:
     B = len(instances)
     n_max = max(i.n_items for i in instances)
     d_max = max(i.d for i in instances)

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core import (BoxStats, lognormal_predictions_batch, lower_bound,
                     uniform_predictions_batch)
 from ..core.jaxsim import MAX_BINS_CAP, POLICIES, known_policy
@@ -193,9 +194,13 @@ def _built_suite(suite):
     key = json.dumps(dataclasses.asdict(suite), sort_keys=True)
     if key in _SUITE_CACHE:
         _SUITE_CACHE.move_to_end(key)
+        obs.counter_add("sweep.suite_cache_hit")
         return _SUITE_CACHE[key]
-    insts = suite.build()
-    built = (insts, [lower_bound(i) for i in insts], pack_instances(insts))
+    obs.counter_add("sweep.suite_cache_miss")
+    with obs.span("suite.build", suite=suite.label()):
+        insts = suite.build()
+        built = (insts, [lower_bound(i) for i in insts],
+                 pack_instances(insts))
     _SUITE_CACHE[key] = built
     while len(_SUITE_CACHE) > _SUITE_CACHE_MAX:
         _SUITE_CACHE.popitem(last=False)
@@ -204,7 +209,9 @@ def _built_suite(suite):
 
 def run_sweep(spec: SweepSpec, store=None, force: bool = False,
               progress=None, backend: Optional[str] = None,
-              shard: str = "auto", block_events: int = 0) -> Dict[str, Dict]:
+              shard: str = "auto", block_events: int = 0,
+              trace_level: int = 0,
+              traces: Optional[Dict] = None) -> Dict[str, Dict]:
     """Expand and run the grid; returns {result_key: record}.
 
     ``backend`` / ``shard`` / ``block_events`` pick the replay engine, lane
@@ -213,6 +220,12 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
     bit-identical on fp32-exact instances), so they are execution arguments
     rather than part of the hashed spec - records computed on any backend
     share the store.
+
+    ``trace_level`` >= 1 additionally captures per-event replay decision
+    traces (``obs.ReplayTrace``): pass a dict as ``traces`` and it is
+    filled with one single-lane trace per ``result_key``.  Traced groups
+    always recompute (the trace only exists by replaying), so the cached
+    -group skip is bypassed; records still land in the store as usual.
 
     record schema (also persisted by SweepStore, see sweep/README.md):
       usage_time, lower_bound, ratio, n_bins_opened, overflowed, max_bins,
@@ -223,29 +236,44 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
 
     records: Dict[str, Dict] = {}
     if store is not None and not force:
-        records.update(store.load(spec))
+        with obs.span("store.load", spec=spec.suites_hash()):
+            records.update(store.load(spec))
+        obs.counter_add("store.load")
 
     for suite in spec.suites:
         insts = lbs = batch = None   # built lazily: cached suites stay free
         for pred in spec.predictions:
             seeds = tuple(spec.seeds) if pred.noisy else (spec.seeds[0],)
             todo = [p for p in spec.policies
-                    if not _group_cached(records, suite, p, pred, seeds)]
+                    if trace_level
+                    or not _group_cached(records, suite, p, pred, seeds)]
             for p in spec.policies:
                 if p not in todo:
                     say(f"skip {suite.label()}/{p}/{pred.label()} (cached)")
+                    obs.counter_add("experiment.cache_hit")
             if not todo:
                 continue
             if insts is None:
                 insts, lbs, batch = _built_suite(suite)
-            pdeps = pad_predictions(
-                batch, [pred.durations(i, seeds) for i in insts])
+            with obs.span("sweep.pad", suite=suite.label(),
+                          pred=pred.label()):
+                pdeps = pad_predictions(
+                    batch, [pred.durations(i, seeds) for i in insts])
             for policy in todo:
                 say(f"run  {suite.label()}/{policy}/{pred.label()} "
                     f"B={batch.B} S={len(seeds)}")
+                obs.counter_add("experiment.cache_miss")
                 res = run_batch(batch, policy, pdeps, spec.max_bins,
                                 spec.max_bins_cap, backend=backend,
-                                shard=shard, block_events=block_events)
+                                shard=shard, block_events=block_events,
+                                trace_level=trace_level)
+                if traces is not None and res.trace is not None:
+                    S = len(seeds)
+                    for bi, inst in enumerate(insts):
+                        for si, seed in enumerate(seeds):
+                            traces[result_key(suite, inst.name, policy,
+                                              pred, seed)] = \
+                                res.trace.lane(bi * S + si)
                 for bi, inst in enumerate(insts):
                     for si, seed in enumerate(seeds):
                         records[result_key(suite, inst.name, policy, pred,
@@ -264,7 +292,9 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
                             "max_bins": int(res.max_bins[bi]),
                         }
                 if store is not None:
-                    store.save(spec, records)
+                    with obs.span("store.save", spec=spec.suites_hash()):
+                        store.save(spec, records)
+                    obs.counter_add("store.save")
     return records
 
 

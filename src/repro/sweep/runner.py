@@ -53,8 +53,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.jaxsim import (MAX_BINS_CAP, _replay_batch, grow_max_bins,
                            known_policy, resolve_backend)
+from ..obs.trace import ReplayTrace, from_scan
 from .batching import InstanceBatch, instances_pdeps
 
 
@@ -77,15 +79,19 @@ def lane_device_count() -> int:
 
 def _simulate_lanes_impl(sizes, times, kinds, items, pdeps, dmask, arrivals,
                          rdeps, n_items, *, policy: str, max_bins: int,
-                         backend: str, block_events: int = 0):
+                         backend: str, block_events: int = 0,
+                         trace_level: int = 0):
     """Flattened-lane replay: ``pdeps`` is (L, n_max) - exactly one
     prediction row per lane.  This is the shard_map body: a single
     lane-batched scan (nested vmaps inside a shard body trip jax 0.4.x's
     sharding propagation - invalid tile_assignment at HLO verification)."""
-    usage, opened, _placements, overflow = _replay_batch(
+    res = _replay_batch(
         sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps, n_items,
         policy=policy, max_bins=max_bins, backend=backend,
-        block_events=block_events)
+        block_events=block_events, trace_level=trace_level)
+    usage, opened, _placements, overflow = res[:4]
+    if trace_level:
+        return usage, opened, overflow, res[4]
     return usage, opened, overflow
 
 
@@ -100,23 +106,35 @@ def _simulate_lanes_impl(sizes, times, kinds, items, pdeps, dmask, arrivals,
 # run the identical flattened computation.
 _simulate_lanes = jax.jit(_simulate_lanes_impl,
                           static_argnames=("policy", "max_bins", "backend",
-                                           "block_events"))
+                                           "block_events", "trace_level"))
+
+
+def _jit_cache_entries() -> int:
+    """Total compiled-trace count across the jitted replay entry points -
+    the source of the ``sweep.jit_trace`` counter (the PR-5 "one trace per
+    geometry" fix as a monitored invariant, not just a regression test)."""
+    return int(_simulate_lanes._cache_size() +
+               _simulate_batch_sharded._cache_size())
 
 
 def _simulate_batch(sizes, times, kinds, items, pdeps, dmask, arrivals,
                     rdeps, n_items, *, policy: str, max_bins: int,
-                    backend: str = "jnp", block_events: int = 0):
+                    backend: str = "jnp", block_events: int = 0,
+                    trace_level: int = 0):
     """pdeps: (B, S, n_max); everything else (B, ...).  Returns
-    (usage (B,S), opened (B,S), overflow (B,S)) - placements are dead-code
-    eliminated to keep device->host transfers small."""
+    (usage (B,S), opened (B,S), overflow (B,S), trace) - placements are
+    dead-code eliminated to keep device->host transfers small.  ``trace``
+    is None unless ``trace_level >= 1``, else the per-event series dict
+    with flat-lane leading axes (L = B*S, E, ...)."""
     B, S, _ = pdeps.shape
-    usage, opened, overflow = _simulate_lanes(
+    out = _simulate_lanes(
         *_flatten_lanes(sizes, times, kinds, items, pdeps, dmask, arrivals,
                         rdeps, n_items),
         policy=policy, max_bins=max_bins, backend=backend,
-        block_events=block_events)
+        block_events=block_events, trace_level=trace_level)
+    usage, opened, overflow = out[:3]
     return (usage.reshape(B, S), opened.reshape(B, S),
-            overflow.reshape(B, S))
+            overflow.reshape(B, S), out[3] if trace_level else None)
 
 
 @partial(jax.jit, static_argnames=("policy", "max_bins", "backend", "ndev",
@@ -142,16 +160,20 @@ def _simulate_batch_sharded(sizes, times, kinds, items, pdeps, dmask,
 
 
 def _run_arrays(arrays, *, policy: str, max_bins: int, backend: str,
-                ndev: int, block_events: int = 0):
+                ndev: int, block_events: int = 0, trace_level: int = 0):
     """One batched run, sharded over lanes when ndev > 1.
 
     The sharded path flattens the (B, S) grid to L = B*S lanes (so seed
     rows balance across devices too), pads L to a device multiple by
     replicating existing lanes - wrapping around when fewer than ``pad``
-    lanes exist - and drops the padding rows on the way out."""
-    if ndev <= 1:
+    lanes exist - and drops the padding rows on the way out.  Trace-level
+    replay forces the single-device path: the stacked (L, E, ...) trace
+    outputs don't earn a re-shard and traces are a debugging/figure mode,
+    not a throughput mode."""
+    if ndev <= 1 or trace_level:
         return _simulate_batch(*arrays, policy=policy, max_bins=max_bins,
-                               backend=backend, block_events=block_events)
+                               backend=backend, block_events=block_events,
+                               trace_level=trace_level)
     B, S, _ = arrays[4].shape
     flat = _flatten_lanes(*arrays)
     L = B * S
@@ -164,7 +186,7 @@ def _run_arrays(arrays, *, policy: str, max_bins: int, backend: str,
                                        max_bins=max_bins, backend=backend,
                                        ndev=ndev, block_events=block_events)
     return (u[:L].reshape(B, S), o[:L].reshape(B, S),
-            ov[:L].reshape(B, S))
+            ov[:L].reshape(B, S), None)
 
 
 @dataclasses.dataclass
@@ -173,6 +195,7 @@ class BatchRunResult:
     n_bins_opened: np.ndarray  # (B, S) int
     overflowed: np.ndarray     # (B, S) bool (True only if the cap was hit)
     max_bins: np.ndarray       # (B,) slot-pool size that produced each lane
+    trace: Optional[ReplayTrace] = None  # trace_level >= 1 only
 
     @property
     def S(self) -> int:
@@ -183,7 +206,8 @@ def run_batch(batch: InstanceBatch, policy: str,
               pdeps: Optional[np.ndarray] = None, max_bins: int = 64,
               max_bins_cap: int = MAX_BINS_CAP,
               auto_grow: bool = True, backend: Optional[str] = None,
-              shard: str = "auto", block_events: int = 0) -> BatchRunResult:
+              shard: str = "auto", block_events: int = 0,
+              trace_level: int = 0) -> BatchRunResult:
     """Replay every lane of ``batch`` under ``policy`` (any
     ``jaxsim.SCAN_POLICIES`` name, category-structured policies included).
 
@@ -199,6 +223,12 @@ def run_batch(batch: InstanceBatch, policy: str,
     replay megakernel: blocks of that many events per invocation with the
     carry resident on-chip.  All three are execution arguments - they
     never change the replayed decisions.
+
+    ``trace_level`` >= 1 also returns the per-event decision series as
+    ``result.trace`` (an ``obs.ReplayTrace``; level >= 2 adds the per-slot
+    alive mask).  Tracing never changes decisions, but it does change the
+    execution plan: per-event replay (the blocked megakernel is bypassed)
+    on a single device.  ``trace_level=0`` runs exactly today's code path.
     """
     assert known_policy(policy), f"{policy!r} is not a scan policy"
     assert shard in ("auto", "never", "always"), shard
@@ -219,29 +249,66 @@ def run_batch(batch: InstanceBatch, policy: str,
     mb = max_bins
     arrays = (batch.sizes, batch.times, batch.kinds, batch.items, pdeps,
               batch.dmask, batch.arrivals, batch.pdeps, batch.n_items)
-    while True:
-        sub = tuple(jnp.asarray(a[lanes]) for a in arrays)
-        u, o, ov = _run_arrays(sub, policy=policy, max_bins=mb,
-                               backend=backend, ndev=ndev,
-                               block_events=block_events)
-        usage[lanes] = np.asarray(u)
-        opened[lanes] = np.asarray(o)
-        over[lanes] = np.asarray(ov)
-        mb_used[lanes] = mb
-        lanes = lanes[np.asarray(ov).any(axis=1)]
-        if lanes.size == 0 or not auto_grow or mb >= max_bins_cap:
-            break
-        mb = grow_max_bins(mb, max_bins_cap)
-    return BatchRunResult(usage, opened, over, mb_used)
+    trace_np = None
+    with obs.span("sweep.run_batch", policy=policy, backend=backend,
+                  B=B, S=S) as rb_span:
+        rungs = 0
+        while True:
+            with obs.span("sweep.flatten"):
+                sub = tuple(jnp.asarray(a[lanes]) for a in arrays)
+            obs.counter_add("sweep.device_transfer_bytes",
+                            sum(int(x.nbytes) for x in sub))
+            c0 = _jit_cache_entries()
+            with obs.span("sweep.scan", policy=policy, max_bins=mb,
+                          lanes=int(lanes.size) * S) as sc, \
+                    obs.jax_profile():
+                u, o, ov, tr = _run_arrays(sub, policy=policy, max_bins=mb,
+                                           backend=backend, ndev=ndev,
+                                           block_events=block_events,
+                                           trace_level=trace_level)
+                usage[lanes] = np.asarray(u)   # blocks on device results
+                opened[lanes] = np.asarray(o)
+                over[lanes] = np.asarray(ov)
+            retraced = _jit_cache_entries() - c0
+            if retraced:
+                obs.counter_add("sweep.jit_trace", retraced)
+                sc.set(retraced=retraced)
+            else:
+                obs.counter_add("sweep.jit_cache_hit")
+            obs.counter_add("sweep.scan_calls")
+            mb_used[lanes] = mb
+            if tr is not None:
+                tr = {k: np.asarray(v) for k, v in tr.items()}
+                if trace_np is None:
+                    trace_np = {k: np.zeros((B * S,) + v.shape[1:],
+                                            v.dtype)
+                                for k, v in tr.items()}
+                rows = (lanes[:, None] * S + np.arange(S)).ravel()
+                for k, v in tr.items():
+                    trace_np[k][rows] = v
+            lanes = lanes[np.asarray(ov).any(axis=1)]
+            if lanes.size == 0 or not auto_grow or mb >= max_bins_cap:
+                break
+            mb = grow_max_bins(mb, max_bins_cap)
+            rungs += 1
+            obs.counter_add("sweep.overflow_rungs")
+        if rungs:
+            rb_span.set(overflow_rungs=rungs)
+    trace = None if trace_np is None else from_scan(
+        trace_np, batch.times, batch.kinds, batch.items, policy=policy,
+        S=S)
+    return BatchRunResult(usage, opened, over, mb_used, trace)
 
 
 def run_grid(batch: InstanceBatch, policies: Sequence[str],
              pdeps: Optional[np.ndarray] = None, max_bins: int = 64,
              max_bins_cap: int = MAX_BINS_CAP,
              backend: Optional[str] = None, shard: str = "auto",
-             block_events: int = 0) -> Dict[str, BatchRunResult]:
+             block_events: int = 0,
+             trace_level: int = 0) -> Dict[str, BatchRunResult]:
     """One batched run per policy over the same instance batch."""
     return {p: run_batch(batch, p, pdeps, max_bins, max_bins_cap,
                          backend=backend, shard=shard,
-                         block_events=block_events)
+                         block_events=block_events,
+                         trace_level=trace_level)
             for p in policies}

@@ -165,8 +165,9 @@ def test_one_trace_across_grid():
     not the padded geometry (L, n_max, d, max_bins, T) - compile exactly
     once per policy: the jitted replay is keyed on the flattened lane
     layout, not the (B, S) split (regression: 6x2 and 12x1 grids used to
-    retrace)."""
-    from repro.sweep.runner import _simulate_lanes
+    retrace).  Retraces are read off the ``sweep.jit_trace`` obs counter -
+    the same signal ``benchmarks/perf.py::sweep_retrace`` gates in CI."""
+    from repro import obs
     i6 = [quantized_instance(40 + k, 30, 3) for k in range(6)]
     i12 = [quantized_instance(60 + k, 30, 3) for k in range(12)]
     b6 = pack_instances(i6)
@@ -174,31 +175,38 @@ def test_one_trace_across_grid():
         b6, [np.stack([i.durations, 2.0 * i.durations]) for i in i6])
     for kw in (dict(backend="jnp"),
                dict(backend="pallas_interpret", block_events=8)):
-        c0 = _simulate_lanes._cache_size()
+        c0 = obs.counter_get("sweep.jit_trace")
         run_batch(b6, "greedy", p6, max_bins=64, **kw)       # 6 x 2 lanes
-        c1 = _simulate_lanes._cache_size()
+        c1 = obs.counter_get("sweep.jit_trace")
         assert c1 == c0 + 1
+        h0 = obs.counter_get("sweep.jit_cache_hit")
         run_batch(pack_instances(i12), "greedy", max_bins=64, **kw)  # 12 x 1
         run_batch(b6, "greedy", p6, max_bins=64, **kw)       # repeat cell
-        assert _simulate_lanes._cache_size() == c1, \
+        assert obs.counter_get("sweep.jit_trace") == c1, \
             "same padded geometry must not retrace"
+        assert obs.counter_get("sweep.jit_cache_hit") == h0 + 2
 
 
 def test_event_sequence_digest_cache():
     """pack_instances memoizes the host-side event sort per instance
     *content* digest: repacking the same instances (same or different
-    list) is a cache hit; different content is not."""
+    list) is a cache hit; different content is not.  Hit/miss stats live
+    on the obs counter registry (``pack.evseq_hit`` / ``pack.evseq_miss``),
+    not a module-private dict."""
+    from repro import obs
     from repro.sweep import batching
     insts = [quantized_instance(71, 20, 2), quantized_instance(72, 25, 2)]
     pack_instances(insts)
-    h0, m0 = batching._EVSEQ_STATS["hits"], batching._EVSEQ_STATS["misses"]
+    h0 = obs.counter_get("pack.evseq_hit")
+    m0 = obs.counter_get("pack.evseq_miss")
     pack_instances(list(insts))
-    assert batching._EVSEQ_STATS["hits"] == h0 + 2
-    assert batching._EVSEQ_STATS["misses"] == m0
+    assert obs.counter_get("pack.evseq_hit") == h0 + 2
+    assert obs.counter_get("pack.evseq_miss") == m0
     other = quantized_instance(73, 20, 2)
     pack_instances([insts[0], other])
-    assert batching._EVSEQ_STATS["hits"] == h0 + 3
-    assert batching._EVSEQ_STATS["misses"] == m0 + 1
+    assert obs.counter_get("pack.evseq_hit") == h0 + 3
+    assert obs.counter_get("pack.evseq_miss") == m0 + 1
+    assert obs.counter_get("pack.evseq_bytes") > 0   # resident-bytes gauge
     # digest covers content, not the name
     renamed = Instance(other.sizes, other.arrivals, other.departures, "x")
     assert batching.instance_digest(renamed) == \
