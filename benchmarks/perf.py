@@ -429,6 +429,65 @@ def obs_overhead(n_instances: int = 28, n_items: int = 250,
     return [st.row(f"perf/obs_overhead_{tag}", f"{frac:.5f}")]
 
 
+def resilience_overhead(n_instances: int = 28, n_items: int = 250,
+                        policies=("first_fit", "best_fit_l2", "greedy",
+                                  "nrt_prioritized")) -> List[str]:
+    """The resilience layer's cost on the CI-gate sweep (sweep_batched_28x4):
+
+      * **no-fault overhead** - microbench the two hot-path primitives the
+        layer adds (a ``faults.fire`` seam crossing with no plan installed
+        - two global reads - and one ``guard.run_ladder`` dispatch whose
+        first rung succeeds), count how many of each one warm sweep
+        actually executes, and bound the cost as a fraction of the warm
+        sweep wall clock.  Asserted < 2% (the tentpole budget); rides the
+        row as the derived column.
+      * **results invariance** - per-policy usage vectors must be
+        bit-identical with an (inert) fault plan installed: the harness
+        only counts crossings until a spec arms.
+    """
+    from repro.data import make_azure_like_suite
+    from repro.resilience import faults, guard
+    from repro.sweep import pack_instances, run_batch
+    insts = make_azure_like_suite(n_instances=n_instances, n_items=n_items,
+                                  seed=11)
+    batch = pack_instances(insts)
+
+    def sweep():
+        return [np.asarray(run_batch(batch, p, max_bins=64).usage_time)
+                for p in policies]
+
+    u_warm = sweep()                               # warm compile
+    # count the seam crossings one warm sweep executes: an inert plan (no
+    # specs) counts every fire() without ever arming
+    plan = faults.install(faults.FaultPlan([]))
+    u_inert = sweep()
+    n_fire = sum(plan.calls.values())
+    n_ladders = plan.calls.get("sweep.scan", 0)    # one run_ladder each
+    faults.clear()
+    for a, b in zip(u_warm, u_inert):
+        assert (a == b).all(), \
+            "an inert fault plan must not change results"
+    # per-call cost of the no-fault primitives
+    k = 100_000
+    t0 = time.perf_counter()
+    for _ in range(k):
+        faults.fire("perf.calib")
+    t_fire = (time.perf_counter() - t0) / k
+    rungs = guard.replay_rungs("jnp", 0, 1)
+    t0 = time.perf_counter()
+    for _ in range(k):
+        guard.run_ladder(lambda r: 0, rungs, site="perf.calib")
+    t_ladder = (time.perf_counter() - t0) / k
+    st = obs.timeit(sweep, n=3, warmup=0)
+    frac = (n_fire * t_fire + n_ladders * t_ladder) / st.best
+    assert frac < 0.02, \
+        f"no-fault resilience overhead {frac:.4f} exceeds the 2% budget " \
+        f"({n_fire} seams @ {t_fire*1e9:.0f}ns, " \
+        f"{n_ladders} ladders @ {t_ladder*1e9:.0f}ns)"
+    tag = f"{n_instances}x{len(policies)}"
+    return [st.row(f"perf/resilience_overhead_{tag}", f"{frac:.5f}")]
+
+
 def sweep_retrace(n_items: int = 30, d: int = 3) -> List[str]:
     """The PR-5 one-trace-per-geometry fix as a monitored perf invariant:
     after warming a 6-instance x 2-prediction-row grid, running the same

@@ -96,7 +96,8 @@ def main(argv=None) -> None:
         # the headline sweep timing (which includes compilation).
         groups = [perf.kernels, perf.jaxsim_vs_oracle, perf.serving_fleet,
                   perf.sweep_grid, perf.api_facade, perf.sweep_categories,
-                  perf.obs_overhead, perf.sweep_retrace,
+                  perf.obs_overhead, perf.resilience_overhead,
+                  perf.sweep_retrace,
                   perf.replay_carry, perf.fitscore_step, perf.replay_block,
                   perf.replay_block_bytes, perf.sweep_sharded,
                   perf.roofline_summary]
@@ -111,8 +112,10 @@ def main(argv=None) -> None:
                       # same grid/policies as sweep_batched_only, so the
                       # full-size facade row rides its compile cache
                       perf.api_facade,
-                      # ... as do the obs-overhead and retrace-gate rows
-                      perf.obs_overhead, perf.sweep_retrace,
+                      # ... as do the obs/resilience-overhead and
+                      # retrace-gate rows
+                      perf.obs_overhead, perf.resilience_overhead,
+                      perf.sweep_retrace,
                       lambda: perf.sweep_categories(n_instances=6,
                                                     n_items=120,
                                                     policies=("cbd",

@@ -12,11 +12,16 @@ Subcommands:
     repo root on sys.path, i.e. run from a checkout).
   * ``obs`` - summarize a JSONL observability run log (spans + counters),
     optionally converting it to Chrome/Perfetto trace_event JSON.
+  * ``validate`` - input validation / quarantine dry run: build the suite
+    instances and report rows the sanitizer would quarantine (NaN sizes,
+    non-positive durations, departure < arrival, oversize, duplicate
+    ids); exits non-zero when anything is bad.
 
     PYTHONPATH=src python -m repro sweep --suites azure --n-instances 12
     PYTHONPATH=src python -m repro serve --requests 2000 --sigma 0.5
     PYTHONPATH=src python -m repro bench --fast
     PYTHONPATH=src python -m repro obs run.obs.jsonl --perfetto trace.json
+    PYTHONPATH=src python -m repro validate --suites azure huawei
 """
 from __future__ import annotations
 
@@ -106,8 +111,9 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
         description=__doc__.splitlines()[0],
-        usage="python -m repro {sweep,serve,bench,obs} ...")
-    ap.add_argument("command", choices=["sweep", "serve", "bench", "obs"])
+        usage="python -m repro {sweep,serve,bench,obs,validate} ...")
+    ap.add_argument("command",
+                    choices=["sweep", "serve", "bench", "obs", "validate"])
     args, rest = ap.parse_known_args(argv)
     if args.command == "sweep":
         from .sweep.__main__ import main as sweep_main
@@ -117,6 +123,9 @@ def main(argv: Optional[List[str]] = None) -> None:
     elif args.command == "obs":
         from .obs.cli import main as obs_main
         obs_main(rest)
+    elif args.command == "validate":
+        from .resilience.validate import main as validate_main
+        validate_main(rest)
     else:
         _bench(rest)
 

@@ -184,7 +184,9 @@ class Experiment:
     def run(self, store: Union[None, str, SweepStore] = None,
             force: bool = False, progress=None,
             backend: Optional[str] = None, shard: str = "auto",
-            block_events: int = 0, trace_level: int = 0) -> Results:
+            block_events: int = 0, trace_level: int = 0,
+            checkpoint_dir: Optional[str] = None,
+            checkpoint_every: int = 2048) -> Results:
         """Run (or resolve from the store) every cell of the grid.
 
         ``store``: a ``SweepStore``, a directory path, or None (no
@@ -194,6 +196,10 @@ class Experiment:
         identity.  ``trace_level`` >= 1 replays every cell with per-event
         decision traces captured into ``Results.traces`` (cells recompute
         even when cached - the trace only exists by replaying).
+
+        ``checkpoint_dir`` enables mid-replay checkpoint/resume
+        (``resilience.checkpoint``): the scan carry is snapshotted every
+        ``checkpoint_every`` events so a killed run resumes bit-identically.
 
         The returned ``Results.metrics`` holds the obs-counter deltas of
         this call (always on - no ``obs.enable()`` needed)."""
@@ -209,7 +215,9 @@ class Experiment:
                 records = run_sweep(spec, store=store, force=force,
                                     progress=progress, backend=backend,
                                     shard=shard, block_events=block_events,
-                                    trace_level=trace_level, traces=traces)
+                                    trace_level=trace_level, traces=traces,
+                                    checkpoint_dir=checkpoint_dir,
+                                    checkpoint_every=checkpoint_every)
                 # run_sweep returns everything the shared store file holds
                 # for these suites; Results only reports THIS experiment's
                 # cells

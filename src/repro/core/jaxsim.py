@@ -66,6 +66,7 @@ Batch padding conventions (produced by ``repro.sweep.batching``):
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import Optional
 
@@ -81,6 +82,7 @@ from ..kernels.fitscore import (ARRIVAL_KIND, DEPARTURE_KIND, F32_EPS, IBIG,
                                 fitscore_select_batch_padded,
                                 replay_carry_names, select_pad_geometry)
 from ..kernels import fitscore as _fk
+from .. import obs
 from .algorithms.adaptive import pow2_ceiling_jnp, prediction_error_jnp
 from .algorithms.departure import departure_window_jnp
 from .algorithms.duration import (dur_exponent_jnp, duration_class_jnp,
@@ -111,7 +113,24 @@ CBDT_DEFAULT_RHO = 0.25 * 86400.0
 # site with the event-blocked replay megakernel) and re-exported here.
 
 # Slot-pool escalation schedule shared by simulate() and repro.sweep.runner.
-MAX_BINS_CAP = 65536
+# The ceiling is env-overridable so capacity-constrained deployments can pin
+# it below (or above) the default without code changes.
+MAX_BINS_CAP = int(os.environ.get("REPRO_MAX_BINS_CAP", "65536"))
+
+
+class CapacityError(RuntimeError):
+    """The overflow-escalation ladder hit its ceiling and the replay still
+    overflows: the instance genuinely needs more than ``max_bins_cap``
+    concurrently open bins (or the cap is misconfigured).  Carries the
+    offending policy / instance / final pool size so sweep drivers can
+    report *which* lane blew up instead of a bare flag."""
+
+    def __init__(self, message: str, *, policy: str = "", max_bins: int = 0,
+                 instance: str = ""):
+        super().__init__(message)
+        self.policy = policy
+        self.max_bins = max_bins
+        self.instance = instance
 
 # Scoring/selection backends.  "auto" resolves to the Pallas kernel on TPU
 # and the inline jnp path elsewhere; "pallas_interpret" runs the kernel body
@@ -121,7 +140,6 @@ BACKENDS = ("auto", "jnp", "pallas", "pallas_interpret")
 
 def resolve_backend(backend: Optional[str] = None) -> str:
     """Resolve a backend name (or REPRO_FITSCORE_BACKEND / "auto")."""
-    import os
     backend = backend or os.environ.get("REPRO_FITSCORE_BACKEND", "auto")
     assert backend in BACKENDS, backend
     if backend == "auto":
@@ -435,6 +453,26 @@ def _category_setup(spec, sizes, pdeps, dmask, arrivals, rdeps, n_items,
             {"err": jnp.ones((L,), f32)}, ())
 
 
+def replay_event_extras(policy, sizes, pdeps, dmask, arrivals, rdeps,
+                        n_items, times, kinds, items):
+    """The per-event extra scan inputs for one policy, computed on the
+    *full* event axis - what a segmented (checkpointed) replay must
+    precompute once and slice per segment via ``_replay_batch``'s
+    ``ev_extra``.  RCP's running distinct-category count is a cumsum over
+    the whole event stream; recomputing it inside a segment would restart
+    the count and change decisions.  PAD events are never arrivals, so
+    tail padding leaves the cumsum undisturbed.  Returns a (possibly
+    empty) tuple of (L, E) arrays."""
+    spec = policy_spec(policy)
+    if spec.family == "score":
+        return ()
+    _, _, xs_extra = _category_setup(
+        spec, jnp.asarray(sizes), jnp.asarray(pdeps), dmask,
+        jnp.asarray(arrivals), jnp.asarray(rdeps), jnp.asarray(n_items),
+        jnp.asarray(times), jnp.asarray(kinds), jnp.asarray(items), 1)
+    return xs_extra
+
+
 # ======================================================================
 # The event-blocked replay path (kernel backends, block_events > 1)
 # ======================================================================
@@ -448,7 +486,9 @@ _KERNEL_FAMILY = {"score": "score", "cbd": "cbd", "cbdt": "cbd",
 
 def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
                           arrivals, rdeps, n_items, *, policy: str,
-                          max_bins: int, backend: str, block_events: int):
+                          max_bins: int, backend: str, block_events: int,
+                          carry0=None, return_carry: bool = False,
+                          ev_extra=None):
     """Event-blocked replay: a short ``lax.scan`` over blocks of ``T``
     events, each block processed entirely on-chip by
     ``kernels.fitscore.fitscore_replay_block`` with the packed carry
@@ -473,6 +513,10 @@ def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
     consts, _cat0, xs_extra = _category_setup(
         spec, sizes, pdeps, dmask, arrivals, rdeps, n_items, times, kinds,
         items, Np)
+    if ev_extra is not None:
+        # precomputed full-event-axis extras (segmented replay: RCP's
+        # running distinct-category cumsum must span segments)
+        xs_extra = tuple(jnp.asarray(x) for x in ev_extra)
 
     # per-event operand streams: pure functions of the (predicted)
     # durations, gathered by event item index and padded to a T multiple
@@ -519,24 +563,28 @@ def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
     xs = (jax.tree.map(blocks, ev_i), jax.tree.map(blocks, ev_f),
           blocks(ev_size))
 
-    carry = {
-        "loads": jnp.zeros((L, Np, dpad), f32),
-        "slotf": jnp.zeros((L, Np, _fk.SLOTF_COLS), f32)
-        .at[:, :, _fk.SLOTF_CLOSES].set(NEG),
-        "sloti": jnp.zeros((L, Np, _fk.SLOTI_COLS), i32)
-        .at[:, :, _fk.SLOTI_TAG].set(TAG_VIRGIN),
-        "itemi": jnp.zeros((L, n_max, _fk.ITEMI_COLS), i32)
-        .at[:, :, _fk.ITEMI_PLACE].set(-1),
-        "sf": jnp.zeros((L, _fk.SF_COLS), f32)
-        .at[:, _fk.SF_ALPHA].set(1.0).at[:, _fk.SF_ERR].set(1.0),
-        "si": jnp.zeros((L, _fk.SI_COLS), i32)
-        .at[:, _fk.SI_BASE].set(-1),
-    }
-    if fam == "hybrid":
-        carry["hagg"] = jnp.zeros((L, n_max, dpad), f32)
-    elif fam == "rcp":
-        carry["ragg"] = jnp.zeros((L, _fk.RAGG_ROWS, dpad), f32)
-        carry["ron"] = jnp.zeros((L, KCAT, _fk.RON_COLS), i32)
+    if carry0 is not None:
+        # resume a segmented replay: the packed carry IS the replay state
+        carry = jax.tree.map(jnp.asarray, carry0)
+    else:
+        carry = {
+            "loads": jnp.zeros((L, Np, dpad), f32),
+            "slotf": jnp.zeros((L, Np, _fk.SLOTF_COLS), f32)
+            .at[:, :, _fk.SLOTF_CLOSES].set(NEG),
+            "sloti": jnp.zeros((L, Np, _fk.SLOTI_COLS), i32)
+            .at[:, :, _fk.SLOTI_TAG].set(TAG_VIRGIN),
+            "itemi": jnp.zeros((L, n_max, _fk.ITEMI_COLS), i32)
+            .at[:, :, _fk.ITEMI_PLACE].set(-1),
+            "sf": jnp.zeros((L, _fk.SF_COLS), f32)
+            .at[:, _fk.SF_ALPHA].set(1.0).at[:, _fk.SF_ERR].set(1.0),
+            "si": jnp.zeros((L, _fk.SI_COLS), i32)
+            .at[:, _fk.SI_BASE].set(-1),
+        }
+        if fam == "hybrid":
+            carry["hagg"] = jnp.zeros((L, n_max, dpad), f32)
+        elif fam == "rcp":
+            carry["ragg"] = jnp.zeros((L, _fk.RAGG_ROWS, dpad), f32)
+            carry["ron"] = jnp.zeros((L, KCAT, _fk.RON_COLS), i32)
 
     def step(c, ev):
         evi_b, evf_b, size_b = ev
@@ -551,16 +599,20 @@ def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
         return c, None
 
     carry, _ = jax.lax.scan(step, carry, xs)
-    return (carry["sf"][:, _fk.SF_USAGE],
-            carry["si"][:, _fk.SI_OPENED],
-            carry["itemi"][:, :, _fk.ITEMI_PLACE],
-            carry["si"][:, _fk.SI_OVERFLOW] > 0)
+    out = (carry["sf"][:, _fk.SF_USAGE],
+           carry["si"][:, _fk.SI_OPENED],
+           carry["itemi"][:, :, _fk.ITEMI_PLACE],
+           carry["si"][:, _fk.SI_OVERFLOW] > 0)
+    # usage/opened/placements live in carry columns (cumulative), so the
+    # final segment of a checkpointed replay returns full-run totals
+    return out + (carry,) if return_carry else out
 
 
 def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
                   rdeps=None, n_items=None, *, policy: str, max_bins: int,
                   backend: str = "jnp", block_events: int = 0,
-                  trace_level: int = 0):
+                  trace_level: int = 0, carry0=None,
+                  return_carry: bool = False, ev_extra=None):
     """``L`` lanes' event replays in lockstep: one scan over the event
     *index* whose step processes every lane at once, so the arrival scoring
     is a single (L, slots, d) op - on TPU the fused
@@ -586,7 +638,16 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
     compact (max_bins, d) carry; "pallas"/"pallas_interpret" run the kernel
     natively / in interpret mode with the carry held permanently in the
     padded (Np, dpad) kernel layout (padded once here, not per step).
+
+    Segmented (checkpointed) replay threads the scan carry through:
+    ``carry0`` resumes from a prior segment's carry, ``return_carry``
+    appends the final carry to the outputs, and ``ev_extra`` overrides the
+    per-event extra streams (which must be precomputed on the *full* event
+    axis - RCP's distinct-category cumsum cannot restart per segment).
+    See ``resilience.checkpoint.checkpointed_replay``.
     """
+    assert not (return_carry and trace_level), \
+        "checkpointed replay does not stack decision traces"
     kernel_layout = backend != "jnp"
     if kernel_layout and block_events and block_events > 1 and \
             not trace_level:
@@ -596,7 +657,8 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
         return _replay_batch_blocked(
             sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps,
             n_items, policy=policy, max_bins=max_bins, backend=backend,
-            block_events=block_events)
+            block_events=block_events, carry0=carry0,
+            return_carry=return_carry, ev_extra=ev_extra)
     spec = policy_spec(policy)
     L, n_max, d = sizes.shape
     f32, i32 = jnp.float32, jnp.int32
@@ -617,6 +679,9 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
     consts, cat0, xs_extra = _category_setup(
         spec, sizes, pdeps, dmask, arrivals, rdeps, n_items, times, kinds,
         items, Np)
+    if ev_extra is not None:
+        # precomputed full-event-axis extras (segmented replay)
+        xs_extra = tuple(jnp.asarray(x) for x in ev_extra)
 
     def do_select(base, loads, counts, alive, open_seq, access_seq, closes,
                   size, pdep_j, t, cmask=None):
@@ -881,8 +946,14 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
              jnp.zeros(L, bool))
     xs = tuple(jnp.swapaxes(a, 0, 1)
                for a in (times, kinds, items) + xs_extra)
-    (core, _cat), ys = jax.lax.scan(step, (core0, cat0), xs)
+    init = (core0, cat0) if carry0 is None else \
+        jax.tree.map(jnp.asarray, carry0)
+    (core, _cat), ys = jax.lax.scan(step, init, xs)
     out = (core[8], core[10], core[7], core[11])
+    if return_carry:
+        # usage/opened/placements are cumulative carry columns, so the
+        # final segment of a checkpointed replay returns full-run totals
+        return out + ((core, _cat),)
     if trace_level:
         # scan stacks along the leading (event) axis; traces are (L, E, .)
         return out + ({k: jnp.swapaxes(v, 0, 1) for k, v in ys.items()},)
@@ -944,8 +1015,18 @@ def simulate(inst: Instance, policy: str = "first_fit",
         usage, opened, placements, overflow = _simulate_one(
             *args, policy=policy, max_bins=max_bins, backend=backend,
             block_events=block_events)
-        if not bool(overflow) or not auto_grow or max_bins >= max_bins_cap:
+        if not bool(overflow) or not auto_grow:
             break
+        if max_bins >= max_bins_cap:
+            # escalation exhausted: fail structured, not with a silently
+            # garbage result (auto_grow=False keeps the flag contract)
+            raise CapacityError(
+                f"slot pool exhausted replaying {inst.name!r} with "
+                f"{policy!r}: still overflowing at max_bins={max_bins} "
+                f"(cap {max_bins_cap}; raise REPRO_MAX_BINS_CAP or pass "
+                f"a larger max_bins_cap)",
+                policy=policy, max_bins=max_bins, instance=inst.name)
+        obs.counter_add("sweep.overflow_rungs")
         max_bins = grow_max_bins(max_bins, max_bins_cap)
     return JaxSimResult(float(usage), int(opened),
                         np.asarray(placements), bool(overflow), max_bins)

@@ -18,6 +18,7 @@ from .fitscore import IBIG
 from .fitscore import fitscore as _fitscore_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .rwkv6_scan import rwkv6_chunked as _rwkv6_pallas
+from ..resilience import faults
 
 
 def _use_pallas(impl: str) -> bool:
@@ -99,10 +100,23 @@ def fitscore(remaining, alive, item, open_seq=None, *, norm="linf",
     return scores, best.astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("policy", "impl"))
 def fitscore_select(loads, counts, alive, open_seq, access_seq, closes,
                     size, pdep, now, dmask=None, cmask=None, *, policy,
                     impl="auto"):
+    """Host wrapper over the jitted select: crosses the ``kernel.select``
+    fault seam, then dispatches.  The seam must sit *outside* the jit - a
+    seam inside a traced body would fire once at trace time and never
+    again (see ``resilience.faults``)."""
+    faults.fire("kernel.select")
+    return _fitscore_select_jit(
+        loads, counts, alive, open_seq, access_seq, closes, size, pdep,
+        now, dmask, cmask, policy=policy, impl=impl)
+
+
+@partial(jax.jit, static_argnames=("policy", "impl"))
+def _fitscore_select_jit(loads, counts, alive, open_seq, access_seq, closes,
+                         size, pdep, now, dmask=None, cmask=None, *, policy,
+                         impl="auto"):
     """Fused single-state placement decision over the full 8-policy family
     (``core.jaxsim.POLICIES``): loads (N,d), counts/alive/open_seq/
     access_seq/closes (N,), size (d,), pdep/now scalars.  ``cmask`` (N,)
@@ -127,10 +141,22 @@ def fitscore_select(loads, counts, alive, open_seq, access_seq, closes,
                         closes, size, pdep, now, dmask, cmask)
 
 
-@partial(jax.jit, static_argnames=("policy", "n", "d", "impl"))
 def fitscore_select_block(loads, alive, open_seq, access_seq, closes, size,
                           pdep, now, cat=None, tags=None, *, policy, n, d,
                           impl="auto"):
+    """Host wrapper over the jitted blocked select: crosses the
+    ``kernel.select_block`` fault seam, then dispatches (seam outside the
+    jit, same as ``fitscore_select``)."""
+    faults.fire("kernel.select_block")
+    return _fitscore_select_block_jit(
+        loads, alive, open_seq, access_seq, closes, size, pdep, now, cat,
+        tags, policy=policy, n=n, d=d, impl=impl)
+
+
+@partial(jax.jit, static_argnames=("policy", "n", "d", "impl"))
+def _fitscore_select_block_jit(loads, alive, open_seq, access_seq, closes,
+                               size, pdep, now, cat=None, tags=None, *,
+                               policy, n, d, impl="auto"):
     """One placement decision through the event-blocked replay megakernel
     at T=1 (``kernels.fitscore.fitscore_replay_block``): a single-lane
     carry holding the pool state replays one arrival event and the chosen

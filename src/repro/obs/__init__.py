@@ -16,8 +16,8 @@ out of the scan as stacked outputs (``ReplayTrace``).
 """
 from .collector import (Span, TimingStats, annotate, counter_add,
                         counter_deltas, counter_get, counter_ops, counters,
-                        disable, enable, enabled, events, recording, reset,
-                        span, timeit, traced)
+                        disable, enable, enabled, events, instant, recording,
+                        reset, span, timeit, traced)
 from .export import (chrome_trace_events, export_jsonl, export_perfetto,
                      jax_profile, read_jsonl, summarize)
 from .trace import (ReplayTrace, TraceDivergence, diff_traces, from_scan)
@@ -25,7 +25,8 @@ from .trace import (ReplayTrace, TraceDivergence, diff_traces, from_scan)
 __all__ = [
     "Span", "TimingStats", "annotate", "counter_add", "counter_deltas",
     "counter_get", "counter_ops", "counters", "disable", "enable",
-    "enabled", "events", "recording", "reset", "span", "timeit", "traced",
+    "enabled", "events", "instant", "recording", "reset", "span", "timeit",
+    "traced",
     "chrome_trace_events", "export_jsonl", "export_perfetto", "jax_profile",
     "read_jsonl", "summarize",
     "ReplayTrace", "TraceDivergence", "diff_traces", "from_scan",

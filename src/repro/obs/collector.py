@@ -145,6 +145,23 @@ def span(name: str, cat: Optional[str] = None, **args):
     return Span(name, cat or name.split(".", 1)[0], args)
 
 
+def instant(name: str, **args) -> None:
+    """Record a zero-duration point event (Chrome ``ph: "i"``) - "a thing
+    happened here": an injected fault, a retry, a degradation step, a
+    checkpoint resume.  Gated like spans (the matching counter is the
+    always-on record; the instant adds the *when* and the context when
+    recording is enabled)."""
+    if not _ENABLED:
+        return
+    ev = {"name": name, "cat": name.split(".", 1)[0], "ph": "i",
+          "ts": (time.perf_counter() - _T0) * 1e6, "dur": 0.0,
+          "tid": threading.get_ident() % 0xFFFF}
+    if args:
+        ev["args"] = args
+    with _LOCK:
+        _EVENTS.append(ev)
+
+
 def annotate(**kw) -> None:
     """Attach attributes to the calling thread's innermost open span
     (no-op when disabled or outside any span)."""

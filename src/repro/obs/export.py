@@ -71,7 +71,7 @@ def chrome_trace_events(events: Optional[List[dict]] = None,
     ride along as ``otherData`` so they survive the round trip)."""
     events, counters = _pick(events, counters)
     pid = os.getpid()
-    out = [{"pid": pid, "tid": ev.get("tid", 0), "ph": "X",
+    out = [{"pid": pid, "tid": ev.get("tid", 0), "ph": ev.get("ph", "X"),
             "name": ev["name"], "cat": ev.get("cat", ""),
             "ts": ev["ts"], "dur": ev["dur"],
             "args": ev.get("args", {})} for ev in events]

@@ -1,0 +1,43 @@
+"""repro.resilience - fault injection, guarded dispatch, checkpoint/resume
+and input quarantine: the layer that keeps long replays and the serving
+scheduler alive when parts of the stack fail.
+
+  * ``faults``     - deterministic scripted failures at the dispatch seams
+                     (env ``REPRO_FAULTS``; every recovery path below is
+                     CI-testable because the failures replay identically),
+  * ``guard``      - retry-with-backoff for transient device errors, then
+                     graceful degradation down an explicit ladder (blocked
+                     megakernel -> per-event kernel -> jnp reference,
+                     sharded -> single device) with bit-identical results,
+  * ``checkpoint`` - atomic scan-carry snapshots at block boundaries so a
+                     killed ``run_sweep --resume`` continues bit-identically,
+  * ``validate``   - malformed workload rows quarantined (counted), never
+                     crashing a run; ``python -m repro validate``.
+
+Counter glossary additions live in ``sweep/README.md`` ("Resilience").
+"""
+from ..core.jaxsim import CapacityError
+from . import checkpoint, faults, guard, validate
+from .checkpoint import (ReplayCheckpointer, checkpointed_replay,
+                         load_checkpoint, save_checkpoint)
+from .faults import FAULT_KINDS, FaultPlan, FaultSpec, InjectedFault, fire, \
+    parse_plan
+from .guard import (Rung, backoff_delay, guarded_call, is_degradable,
+                    is_transient, replay_rungs, run_ladder, rung_label,
+                    transition_name)
+from .validate import (ValidationReport, sanitize_rows, validate_instance,
+                       validate_rows)
+
+__all__ = [
+    "CapacityError",
+    "checkpoint", "faults", "guard", "validate",
+    "ReplayCheckpointer", "checkpointed_replay", "load_checkpoint",
+    "save_checkpoint",
+    "FAULT_KINDS", "FaultPlan", "FaultSpec", "InjectedFault", "fire",
+    "parse_plan",
+    "Rung", "backoff_delay", "guarded_call", "is_degradable",
+    "is_transient", "replay_rungs", "run_ladder", "rung_label",
+    "transition_name",
+    "ValidationReport", "sanitize_rows", "validate_instance",
+    "validate_rows",
+]

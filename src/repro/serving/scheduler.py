@@ -35,6 +35,7 @@ from ..core.types import Arrival
 from ..core.algorithms import get_algorithm
 from ..core.algorithms.departure import departure_window
 from ..core.algorithms.duration import duration_class
+from ..resilience import faults, guard
 
 # scheduler policy (+ kwargs) -> jaxsim/kernel policy name
 _DEVICE_POLICIES = ("first_fit", "best_fit", "mru", "greedy",
@@ -139,7 +140,9 @@ class DVBPScheduler:
         return int(departure_window(pdep, self.alg.rho))
 
     def _select_device(self, size: np.ndarray, pdep: Optional[float],
-                       now: float, cat: Optional[int]) -> int:
+                       now: float, cat: Optional[int],
+                       impl: Optional[str] = None,
+                       block: Optional[bool] = None) -> int:
         """Fused on-device placement decision over the whole pool state.
 
         The pool uses absolute, never-reused bin indices, so the kernel's
@@ -147,12 +150,15 @@ class DVBPScheduler:
         the best-feasible result is consulted; -1 means "open a new bin",
         exactly the host algorithms' contract.  ``cat`` (CBD/CBDT) turns
         into the kernel's category mask: only same-class replicas are
-        eligible."""
+        eligible.  ``impl`` / ``block`` override the configured engine -
+        how ``_select_guarded`` degrades a failing plan."""
         import jax.numpy as jnp
 
         from ..kernels import ops
+        impl = self.select_backend if impl is None else impl
+        block = self.select_block if block is None else block
         p = self.pool
-        if self.select_block:
+        if block:
             # the event-blocked replay megakernel at T=1: one arrival
             # event replayed on a single-lane snapshot of the pool state
             slot, found = ops.fitscore_select_block(
@@ -167,7 +173,7 @@ class DVBPScheduler:
                 cat=cat, tags=None if cat is None else jnp.asarray(
                     p.tag, jnp.int32),
                 policy=self._device_policy, n=p._cap, d=3,
-                impl=self.select_backend)
+                impl=impl)
             return int(slot) if bool(found) else -1
         cmask = None if cat is None else \
             jnp.asarray(p.tag == cat, jnp.int32)
@@ -181,8 +187,51 @@ class DVBPScheduler:
             jnp.asarray(size, jnp.float32),
             float(pdep) if pdep is not None else float(now), float(now),
             cmask=cmask, policy=self._device_policy,
-            impl=self.select_backend)
+            impl=impl)
         return int(slot) if bool(found) else -1
+
+    def _select_guarded(self, size: np.ndarray, pdep: Optional[float],
+                        now: float, arr: Arrival):
+        """The placement decision behind the serving degradation ladder.
+
+        Device rungs: the configured plan (megakernel at T=1 when
+        ``select_block``), then the per-request kernel select, then the
+        jnp reference select - and when every device rung fails, the host
+        numpy algorithm zoo places the request (the scheduler NEVER stops
+        placing; it just gets slower).  A rung failing with a device error
+        (``guard.is_degradable``) steps down with a
+        ``resilience.degrade_select_<from>_<to>`` counter; anything else
+        (a bug) propagates.  Returns ``(idx, tag)`` where ``tag`` is the
+        engine that actually decided."""
+        from ..kernels.ops import resolved_select_impl
+        if self.select_backend == "host":
+            return self.alg.select_bin(arr), "host"
+        cat = self._request_category(pdep, now)
+        rungs = []
+        if self.select_block:
+            rungs.append(("block", self.select_backend, True))
+        rungs.append(("kernel", self.select_backend, False))
+        if resolved_select_impl(self.select_backend, block=False) != "jnp":
+            rungs.append(("jnp", "jnp", False))
+        for i, (label, impl, block) in enumerate(rungs):
+            try:
+                faults.fire("serving.select")
+                idx = self._select_device(size, pdep, now, cat,
+                                          impl=impl, block=block)
+            except Exception as e:
+                if not guard.is_degradable(e):
+                    raise
+                nxt = rungs[i + 1][0] if i + 1 < len(rungs) else "host"
+                obs.counter_add(f"resilience.degrade_select_{label}_{nxt}")
+                obs.instant("resilience.degrade_select", frm=label, to=nxt,
+                            error=str(e)[:200])
+                continue
+            if cat is not None:
+                self.alg._cat = cat   # keep the host class's tag
+                #                       bookkeeping (on_placed) in sync
+            return idx, resolved_select_impl(impl, block=block)
+        # every device rung failed: the host algorithm zoo still places
+        return self.alg.select_bin(arr), "host"
 
     # ------------------------------------------------------------------- api
     def place(self, req: Request, now: float) -> int:
@@ -193,28 +242,17 @@ class DVBPScheduler:
             pdur = req.predicted_decode_len / self.tps
         pdep = None if pdur is None else now + pdur
         arr = Arrival(req.rid, size, now, pdep)
-        # span backend tag: the engine that ACTUALLY decides - "host" for
-        # the numpy algorithm zoo, else the kernel impl the select resolves
-        # to ("auto" silently falls back to jnp off-TPU; the tag and the
-        # serving.select_<backend> counter make that visible)
-        if self.select_backend != "host":
-            from ..kernels.ops import resolved_select_impl
-            tag = resolved_select_impl(self.select_backend,
-                                       block=self.select_block)
-        else:
-            tag = "host"
+        # span backend tag: the engine that ACTUALLY decided - "host" for
+        # the numpy algorithm zoo, else the kernel impl that served the
+        # select after any resilience degradation ("auto" silently falls
+        # back to jnp off-TPU; the tag and the serving.select_<backend>
+        # counter make both visible)
+        with obs.span("serving.select", policy=self._policy,
+                      rid=req.rid) as sp:
+            idx, tag = self._select_guarded(size, pdep, now, arr)
+            sp.set(backend=tag)
         self.last_select_backend = tag
         obs.counter_add(f"serving.select_{tag}")
-        with obs.span("serving.select", policy=self._policy, backend=tag,
-                      rid=req.rid):
-            if self.select_backend != "host":
-                cat = self._request_category(pdep, now)
-                idx = self._select_device(size, pdep, now, cat)
-                if cat is not None:
-                    self.alg._cat = cat   # keep the host class's tag
-                    #                       bookkeeping (on_placed) in sync
-            else:
-                idx = self.alg.select_bin(arr)
         opened = idx < 0
         if opened:
             idx = self.pool.open_bin(now)

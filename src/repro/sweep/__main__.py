@@ -71,6 +71,17 @@ def main(argv=None, prog: str = "python -m repro sweep") -> None:
                     help="kernel backends: events per megakernel "
                          "invocation (0/1 = per-event replay); execution "
                          "knob only, never changes results")
+    ap.add_argument("--resume", action="store_true",
+                    help="checkpoint every replay under "
+                         "STORE/checkpoints and resume a killed sweep "
+                         "bit-identically (sugar for --checkpoint-dir "
+                         "STORE/checkpoints)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="snapshot the scan carry here at event-block "
+                         "boundaries; a rerun resumes from the last "
+                         "checkpoint")
+    ap.add_argument("--checkpoint-every", type=int, default=2048,
+                    help="events between checkpoint snapshots")
     args = ap.parse_args(argv)
 
     policies = tuple(SCAN_POLICIES) if args.policies == "all" else \
@@ -87,12 +98,18 @@ def main(argv=None, prog: str = "python -m repro sweep") -> None:
         max_bins=args.max_bins, max_bins_cap=args.max_bins_cap)
 
     store = None if args.no_store else SweepStore(args.store)
+    ckpt_dir = args.checkpoint_dir
+    if args.resume and ckpt_dir is None:
+        import os
+        ckpt_dir = os.path.join(args.store, "checkpoints")
     print(f"# sweep {spec.spec_hash()} -> "
           f"{store.path(spec) if store else '(not stored)'}")
     records = run_sweep(spec, store=store, force=args.force,
                         progress=lambda m: print(f"# {m}", flush=True),
                         backend=args.backend, shard=args.shard,
-                        block_events=args.block_events)
+                        block_events=args.block_events,
+                        checkpoint_dir=ckpt_dir,
+                        checkpoint_every=args.checkpoint_every)
 
     print(f"{'policy':<18} {'pred':<14} {'n':>4} {'mean':>8} {'median':>8} "
           f"{'q1':>8} {'q3':>8}")

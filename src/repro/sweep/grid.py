@@ -211,7 +211,9 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
               progress=None, backend: Optional[str] = None,
               shard: str = "auto", block_events: int = 0,
               trace_level: int = 0,
-              traces: Optional[Dict] = None) -> Dict[str, Dict]:
+              traces: Optional[Dict] = None,
+              checkpoint_dir: Optional[str] = None,
+              checkpoint_every: int = 2048) -> Dict[str, Dict]:
     """Expand and run the grid; returns {result_key: record}.
 
     ``backend`` / ``shard`` / ``block_events`` pick the replay engine, lane
@@ -227,12 +229,27 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
     always recompute (the trace only exists by replaying), so the cached
     -group skip is bypassed; records still land in the store as usual.
 
+    ``checkpoint_dir`` turns on checkpointed replay: the scan carry is
+    snapshotted every ``checkpoint_every`` events
+    (``resilience.checkpoint``), so a killed sweep resumed over the same
+    spec continues mid-scan bit-identically - the store-group journal
+    already makes whole completed groups resumable; checkpoints make the
+    *current* group resumable too.  The CLI's ``--resume`` is sugar for
+    a checkpoint dir next to the store.
+
     record schema (also persisted by SweepStore, see sweep/README.md):
       usage_time, lower_bound, ratio, n_bins_opened, overflowed, max_bins,
       suite, instance, policy, pred, seed
     """
     say = progress or (lambda *_: None)
+    from ..resilience import faults
+    from ..resilience.checkpoint import ReplayCheckpointer
     from .runner import run_batch   # local import keeps grid importable fast
+
+    ckpt = None
+    if checkpoint_dir is not None:
+        ckpt = ReplayCheckpointer(checkpoint_dir,
+                                  every_events=checkpoint_every)
 
     records: Dict[str, Dict] = {}
     if store is not None and not force:
@@ -263,10 +280,15 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
                 say(f"run  {suite.label()}/{policy}/{pred.label()} "
                     f"B={batch.B} S={len(seeds)}")
                 obs.counter_add("experiment.cache_miss")
+                faults.fire("sweep.group")
+                ckpt_key = "-".join(
+                    (spec.suites_hash(), suite.label(), policy,
+                     pred.label()))
                 res = run_batch(batch, policy, pdeps, spec.max_bins,
                                 spec.max_bins_cap, backend=backend,
                                 shard=shard, block_events=block_events,
-                                trace_level=trace_level)
+                                trace_level=trace_level,
+                                checkpoint=ckpt, checkpoint_key=ckpt_key)
                 if traces is not None and res.trace is not None:
                     S = len(seeds)
                     for bi, inst in enumerate(insts):
@@ -274,10 +296,11 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
                             traces[result_key(suite, inst.name, policy,
                                               pred, seed)] = \
                                 res.trace.lane(bi * S + si)
+                group_recs = {}
                 for bi, inst in enumerate(insts):
                     for si, seed in enumerate(seeds):
-                        records[result_key(suite, inst.name, policy, pred,
-                                           seed)] = {
+                        group_recs[result_key(suite, inst.name, policy,
+                                              pred, seed)] = {
                             "suite": suite.label(),
                             "instance": inst.name,
                             "policy": policy,
@@ -291,9 +314,12 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
                             "overflowed": bool(res.overflowed[bi, si]),
                             "max_bins": int(res.max_bins[bi]),
                         }
+                records.update(group_recs)
                 if store is not None:
                     with obs.span("store.save", spec=spec.suites_hash()):
-                        store.save(spec, records)
+                        # the group delta is journaled before the main
+                        # rewrite, so a crash mid-save loses nothing
+                        store.save(spec, records, group_records=group_recs)
                     obs.counter_add("store.save")
     return records
 

@@ -57,6 +57,8 @@ from .. import obs
 from ..core.jaxsim import (MAX_BINS_CAP, _replay_batch, grow_max_bins,
                            known_policy, resolve_backend)
 from ..obs.trace import ReplayTrace, from_scan
+from ..resilience import faults, guard
+from ..resilience.checkpoint import ReplayCheckpointer, checkpointed_replay
 from .batching import InstanceBatch, instances_pdeps
 
 
@@ -170,6 +172,7 @@ def _run_arrays(arrays, *, policy: str, max_bins: int, backend: str,
     replay forces the single-device path: the stacked (L, E, ...) trace
     outputs don't earn a re-shard and traces are a debugging/figure mode,
     not a throughput mode."""
+    faults.fire("sweep.scan")
     if ndev <= 1 or trace_level:
         return _simulate_batch(*arrays, policy=policy, max_bins=max_bins,
                                backend=backend, block_events=block_events,
@@ -187,6 +190,47 @@ def _run_arrays(arrays, *, policy: str, max_bins: int, backend: str,
                                        ndev=ndev, block_events=block_events)
     return (u[:L].reshape(B, S), o[:L].reshape(B, S),
             ov[:L].reshape(B, S), None)
+
+
+def _dispatch(arrays, *, policy: str, max_bins: int, backend: str,
+              ndev: int, block_events: int = 0, trace_level: int = 0):
+    """One batched run behind the resilience ladder: transient device
+    failures retry with backoff, persistent ones degrade blocked ->
+    per-event -> jnp / sharded -> single-device (``guard.replay_rungs``).
+    Every rung replays identical decisions, so the results of a degraded
+    dispatch are bit-identical to the requested plan - just slower.  Blocks
+    on the device results so execution-time failures surface inside the
+    ladder, not at the caller's first ``np.asarray``."""
+    rungs = guard.replay_rungs(backend, block_events, ndev)
+
+    def attempt(rung):
+        out = _run_arrays(arrays, policy=policy, max_bins=max_bins,
+                          backend=rung.backend, ndev=rung.ndev,
+                          block_events=rung.block_events,
+                          trace_level=trace_level)
+        jax.block_until_ready(out[:3])
+        return out
+
+    rung, out = guard.run_ladder(attempt, rungs, site="sweep.scan")
+    if rung is not rungs[0]:
+        obs.annotate(degraded_to=rung.label)
+    return out
+
+
+def _run_checkpointed(arrays, *, policy: str, max_bins: int, backend: str,
+                      block_events: int, ckpt: ReplayCheckpointer,
+                      key: str):
+    """One batched run through the segmented checkpointed replay (single
+    device by construction; ``resilience.checkpoint``).  Same outputs as
+    ``_run_arrays`` minus traces."""
+    faults.fire("sweep.scan")
+    B, S, _ = arrays[4].shape
+    flat = _flatten_lanes(*arrays)
+    u, o, _placements, ov = checkpointed_replay(
+        flat, policy=policy, max_bins=max_bins, backend=backend,
+        block_events=block_events, ckpt=ckpt, key=key)
+    return (np.asarray(u).reshape(B, S), np.asarray(o).reshape(B, S),
+            np.asarray(ov).reshape(B, S), None)
 
 
 @dataclasses.dataclass
@@ -207,7 +251,9 @@ def run_batch(batch: InstanceBatch, policy: str,
               max_bins_cap: int = MAX_BINS_CAP,
               auto_grow: bool = True, backend: Optional[str] = None,
               shard: str = "auto", block_events: int = 0,
-              trace_level: int = 0) -> BatchRunResult:
+              trace_level: int = 0,
+              checkpoint: Optional[ReplayCheckpointer] = None,
+              checkpoint_key: str = "") -> BatchRunResult:
     """Replay every lane of ``batch`` under ``policy`` (any
     ``jaxsim.SCAN_POLICIES`` name, category-structured policies included).
 
@@ -229,6 +275,14 @@ def run_batch(batch: InstanceBatch, policy: str,
     alive mask).  Tracing never changes decisions, but it does change the
     execution plan: per-event replay (the blocked megakernel is bypassed)
     on a single device.  ``trace_level=0`` runs exactly today's code path.
+
+    ``checkpoint`` (a ``resilience.ReplayCheckpointer``) replays in
+    checkpointed segments so a killed run resumes bit-identically
+    (single-device, no traces); ``checkpoint_key`` names the snapshot
+    file.  Without it, dispatch runs behind the resilience ladder
+    (``_dispatch``): transient device failures retry, persistent ones
+    degrade blocked -> per-event -> jnp / sharded -> single-device with
+    identical results.
     """
     assert known_policy(policy), f"{policy!r} is not a scan policy"
     assert shard in ("auto", "never", "always"), shard
@@ -262,10 +316,17 @@ def run_batch(batch: InstanceBatch, policy: str,
             with obs.span("sweep.scan", policy=policy, max_bins=mb,
                           lanes=int(lanes.size) * S) as sc, \
                     obs.jax_profile():
-                u, o, ov, tr = _run_arrays(sub, policy=policy, max_bins=mb,
-                                           backend=backend, ndev=ndev,
-                                           block_events=block_events,
-                                           trace_level=trace_level)
+                if checkpoint is not None and not trace_level:
+                    u, o, ov, tr = _run_checkpointed(
+                        sub, policy=policy, max_bins=mb, backend=backend,
+                        block_events=block_events, ckpt=checkpoint,
+                        key=f"{checkpoint_key or policy}-mb{mb}")
+                else:
+                    u, o, ov, tr = _dispatch(sub, policy=policy,
+                                             max_bins=mb, backend=backend,
+                                             ndev=ndev,
+                                             block_events=block_events,
+                                             trace_level=trace_level)
                 usage[lanes] = np.asarray(u)   # blocks on device results
                 opened[lanes] = np.asarray(o)
                 over[lanes] = np.asarray(ov)

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import Instance, get_algorithm, run
-from repro.core.jaxsim import POLICIES, simulate
+from repro.core.jaxsim import POLICIES, CapacityError, simulate
 from repro.data import make_azure_like_suite
 
 
@@ -61,7 +61,16 @@ def test_overflow_auto_grow():
 
 
 def test_overflow_cap_respected():
+    """Exhausting the escalation ladder is a structured failure carrying
+    the offending policy/instance, not a silently-garbage result."""
     inst = quantized_instance(n=100)
-    j = simulate(inst, "first_fit", max_bins=1, max_bins_cap=2)
+    with pytest.raises(CapacityError) as e:
+        simulate(inst, "first_fit", max_bins=1, max_bins_cap=2)
+    assert e.value.max_bins == 2
+    assert e.value.policy == "first_fit"
+    assert e.value.instance == inst.name
+    # auto_grow=False keeps the overflow-flag contract: no raise
+    j = simulate(inst, "first_fit", max_bins=2, max_bins_cap=2,
+                 auto_grow=False)
     assert j.overflowed
     assert j.max_bins == 2
