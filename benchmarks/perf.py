@@ -635,6 +635,88 @@ def serving_fleet() -> List[str]:
     return rows
 
 
+def serve_throughput(n: int = 2000, rate: float = 5e4, tps: float = 1.2e5,
+                     geometries=(1, 8, 32, 256)) -> List[str]:
+    """Batched admission throughput: one Poisson trace at control-plane
+    rate served through the double-buffered block dispatcher at
+    T = 1 / 32 / 256.  Middle column: us per placed request (best of 3
+    warm passes); derived: requests placed per second.  The three runs
+    are asserted decision-for-decision equal to each other AND to the
+    sequential host oracle before any row is emitted - a batching config
+    that changed placements would fail the bench, not ship a number.
+    Extra rows: p50/p99 admission-to-placement latency at T=256 and the
+    demand-vector memo hit rate (counter-verified)."""
+    import heapq
+
+    from repro.serving.dispatch import serve_traffic
+    from repro.serving.scheduler import DVBPScheduler, ReplicaCapacity
+    from repro.serving.traffic import poisson_requests
+
+    caps = ReplicaCapacity()
+    reqs = poisson_requests(n, rate=rate, seed=0, sigma_pred=0.3)
+
+    sched = DVBPScheduler("best_fit", caps, {"norm": "linf"},
+                          tokens_per_second=tps)
+    heap, oracle = [], {}
+    for r in sorted(reqs, key=lambda x: x.arrival):
+        while heap and heap[0][0] <= r.arrival:
+            ft, rid = heapq.heappop(heap)
+            sched.finish(rid, ft)
+        oracle[r.rid] = sched.place(r, r.arrival)
+        heapq.heappush(heap, (r.arrival + r.decode_len / tps, r.rid))
+
+    memo0 = {k: obs.counter_get(k) for k in
+             ("serving.size_memo_hit", "serving.size_memo_miss")}
+    rows, reports = [], {}
+    for T in (1, 32, 256):
+        kw = dict(tps=tps, batch_max=T, geometries=geometries,
+                  max_bins=64)
+        serve_traffic(reqs, "best_fit_linf", caps, **kw)     # warm traces
+        best = None
+        for _ in range(3):
+            rep = serve_traffic(reqs, "best_fit_linf", caps, **kw)
+            assert rep.placements == oracle, \
+                f"T={T} diverged from the sequential oracle"
+            if best is None or rep.wall_seconds < best.wall_seconds:
+                best = rep
+        reports[T] = best
+        rows.append(f"perf/serve_throughput_T={T},"
+                    f"{best.wall_seconds / best.placed * 1e6:.1f},"
+                    f"{best.throughput:.0f}")
+    p50, p99 = reports[256].latency_quantiles()
+    rows.append(f"perf/serve_latency_p50_T=256,{p50 * 1e6:.1f},1.00")
+    rows.append(f"perf/serve_latency_p99_T=256,{p99 * 1e6:.1f},1.00")
+    hits = obs.counter_get("serving.size_memo_hit") \
+        - memo0["serving.size_memo_hit"]
+    miss = obs.counter_get("serving.size_memo_miss") \
+        - memo0["serving.size_memo_miss"]
+    rate_ = hits / (hits + miss) if hits + miss else 0.0
+    rows.append(f"perf/serve_demand_memo,{hits + miss:.0f},{rate_:.2f}")
+    return rows
+
+
+def serve_retrace(n: int = 300, geometries=(1, 8, 32)) -> List[str]:
+    """The serving analogue of ``perf/sweep_retrace_6x2v12x1``: padding
+    every admission batch to a fixed geometry set bounds the dispatch jit
+    trace count.  After one warm pass, a second identical pass must add
+    ZERO ``serving.jit_trace`` - CI gates the derived column at 0."""
+    from repro.serving.dispatch import serve_traffic
+    from repro.serving.scheduler import ReplicaCapacity
+    from repro.serving.traffic import poisson_requests
+
+    caps = ReplicaCapacity()
+    reqs = poisson_requests(n, rate=5e4, seed=0, sigma_pred=0.3)
+    kw = dict(tps=1.2e5, batch_max=geometries[-1], geometries=geometries,
+              max_bins=64)
+    serve_traffic(reqs, "best_fit_linf", caps, **kw)         # warm
+    before = obs.counter_get("serving.jit_trace")
+    st = obs.timeit(
+        lambda: serve_traffic(reqs, "best_fit_linf", caps, **kw),
+        n=3, warmup=0)
+    retraces = obs.counter_get("serving.jit_trace") - before
+    return [st.row("perf/serve_retrace", f"{retraces:.0f}")]
+
+
 def roofline_summary() -> List[str]:
     rows = []
     for path in sorted(glob.glob("experiments/dryrun/*_16x16.json")):

@@ -100,6 +100,7 @@ def main(argv=None) -> None:
                   perf.sweep_retrace,
                   perf.replay_carry, perf.fitscore_step, perf.replay_block,
                   perf.replay_block_bytes, perf.sweep_sharded,
+                  perf.serve_throughput, perf.serve_retrace,
                   perf.roofline_summary]
         if args.fast:
             # sweep_batched_only re-times the full-size headline row
@@ -126,7 +127,12 @@ def main(argv=None) -> None:
                       # the event-blocked replay rows ride the fast JSON
                       # artifact so CI tracks them per push
                       lambda: perf.replay_block(lanes=2, n_items=60),
-                      lambda: perf.replay_block_bytes(lanes=2, n_items=30)]
+                      lambda: perf.replay_block_bytes(lanes=2, n_items=30),
+                      # batched-admission rows ride the fast JSON too:
+                      # CI gates throughput scaling, latency and the
+                      # serve retrace invariant per push
+                      lambda: perf.serve_throughput(n=480),
+                      perf.serve_retrace]
         for group in groups:
             try:
                 for line in group():

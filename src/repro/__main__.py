@@ -7,7 +7,9 @@ Subcommands:
   * ``serve`` - fleet capacity planning: replay a synthetic serving
     request stream through the batched DVBP engine (``repro.api``
     serving_requests workload) and compare policies against the host
-    fleet baselines.
+    fleet baselines.  With ``--traffic {poisson,diurnal}`` it instead
+    drives the live batched front end (admission queue -> double-buffered
+    block dispatch) and reports throughput + placement latency.
   * ``bench`` - the benchmark harness (``benchmarks.run``; requires the
     repo root on sys.path, i.e. run from a checkout).
   * ``obs`` - summarize a JSONL observability run log (spans + counters),
@@ -19,6 +21,8 @@ Subcommands:
 
     PYTHONPATH=src python -m repro sweep --suites azure --n-instances 12
     PYTHONPATH=src python -m repro serve --requests 2000 --sigma 0.5
+    PYTHONPATH=src python -m repro serve --traffic poisson --rate 5e4 \
+        --tps 1.2e5 --requests 2000
     PYTHONPATH=src python -m repro bench --fast
     PYTHONPATH=src python -m repro obs run.obs.jsonl --perfetto trace.json
     PYTHONPATH=src python -m repro validate --suites azure huawei
@@ -62,11 +66,37 @@ def _serve(argv: Optional[List[str]]) -> None:
     ap.add_argument("--baselines", action="store_true",
                     help="also run the host round_robin / pack_all fleet "
                          "baselines for reference")
+    ap.add_argument("--traffic", default=None,
+                    choices=["poisson", "diurnal"],
+                    help="run the live batched front end (admission queue "
+                         "-> double-buffered block dispatch) under this "
+                         "synthetic traffic instead of capacity planning")
+    ap.add_argument("--batch-max", type=int, default=256,
+                    help="admission batch size for --traffic mode")
     args = ap.parse_args(argv)
 
     from . import api
     from .serving.fleet import attach_predictions, synth_requests
     from .serving.scheduler import ReplicaCapacity
+
+    if args.traffic:
+        from .serving.dispatch import serve_traffic
+        from .serving.traffic import make_traffic
+        caps = ReplicaCapacity(args.slots, args.kv_tokens,
+                               args.prefill_budget)
+        reqs = make_traffic(args.traffic, args.requests, rate=args.rate,
+                            seed=args.seed, sigma_pred=args.sigma)
+        print(f"{'policy':<18} {'req/s':>10} {'p50_ms':>8} {'p99_ms':>8} "
+              f"{'replica_s':>12} {'opened':>7} {'shed':>6}")
+        for pol in args.policies.split(","):
+            rep = serve_traffic(reqs, pol, caps, tps=args.tps,
+                                batch_max=args.batch_max,
+                                impl=args.backend or "auto")
+            p50, p99 = rep.latency_quantiles()
+            print(f"{pol:<18} {rep.throughput:>10.0f} {p50 * 1e3:>8.2f} "
+                  f"{p99 * 1e3:>8.2f} {rep.replica_seconds:>12.1f} "
+                  f"{rep.replicas_opened:>7d} {rep.shed:>6d}")
+        return
 
     reqs = synth_requests(args.requests, seed=args.seed, rate=args.rate,
                           tps=args.tps)

@@ -152,13 +152,13 @@ class _RCPBase(Algorithm):
         kind, cat = self._dest
         if kind == "L":
             self.pool.tag[idx] = _LARGE
-            self._items[arr.idx] = (cat, "L", arr.pdur)
+            self._items[arr.idx] = (cat, "L", arr.pdur, arr.size)
         elif kind == "G":
             if opened:
                 self.pool.tag[idx] = _GENERAL
             self._agg_general[cat] = self._agg_general.get(
                 cat, np.zeros(self.pool.d)) + arr.size
-            self._items[arr.idx] = (cat, "G", arr.pdur)
+            self._items[arr.idx] = (cat, "G", arr.pdur, arr.size)
         elif kind in ("C", "C!"):
             if opened:
                 self.pool.tag[idx] = self._tag_of(cat)
@@ -166,37 +166,39 @@ class _RCPBase(Algorithm):
                 self._on[cat] = True
             self._agg_catbins[cat] = self._agg_catbins.get(
                 cat, np.zeros(self.pool.d)) + arr.size
-            self._items[arr.idx] = (cat, "C", arr.pdur)
+            self._items[arr.idx] = (cat, "C", arr.pdur, arr.size)
         else:  # base bin
             if opened:
                 self.pool.tag[idx] = _BASE
                 self._base_idx = idx
                 self._agg_base = np.zeros(self.pool.d)
             self._agg_base = self._agg_base + arr.size
-            self._items[arr.idx] = (cat, "B", arr.pdur)
+            self._items[arr.idx] = (cat, "B", arr.pdur, arr.size)
             if float(self._agg_base.max()) > 0.5:
                 self._convert_base(idx)
 
     def _convert_base(self, idx: int):
         """Base bin exceeded 1/2: convert to a category bin of its dominant
-        category and turn that category ON (paper §VI-A)."""
+        category and turn that category ON (paper §VI-A).  Member sizes come
+        from the per-item record (not ``inst.sizes``), so the conversion
+        also works on open-ended streams (serving request ids)."""
         members = {c: np.zeros(self.pool.d) for c in self._seen_cats}
-        for item, (cat, loc, _) in self._items.items():
+        for item, (cat, loc, _, sz) in self._items.items():
             if loc == "B":
-                members[cat] = members[cat] + self.inst.sizes[item]
+                members[cat] = members[cat] + sz
         chosen = max(self._seen_cats, key=lambda c: float(members[c].max()))
         self.pool.tag[idx] = self._tag_of(chosen)
         self._on[chosen] = True
-        for item, (cat, loc, pd) in list(self._items.items()):
+        for item, (cat, loc, pd, sz) in list(self._items.items()):
             if loc == "B":
-                self._items[item] = (cat, "C", pd)
+                self._items[item] = (cat, "C", pd, sz)
                 self._agg_catbins[cat] = self._agg_catbins.get(
-                    cat, np.zeros(self.pool.d)) + self.inst.sizes[item]
+                    cat, np.zeros(self.pool.d)) + sz
         self._agg_base = np.zeros(self.pool.d)
         self._base_idx = -1
 
     def on_departed(self, item: int, idx: int, now: float, size: np.ndarray):
-        cat, loc, pdur = self._items.pop(item)
+        cat, loc, pdur, _ = self._items.pop(item)
         if loc == "G":
             self._agg_general[cat] = np.maximum(
                 self._agg_general[cat] - size, 0.0)

@@ -608,6 +608,86 @@ def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
     return out + (carry,) if return_carry else out
 
 
+def make_live_carry(policy: str, max_bins: int, d: int,
+                    max_items: int = 256):
+    """A fresh single-lane packed replay carry for an *open-ended* event
+    stream - the serving front end's live fleet state.
+
+    Same layout and init as ``_replay_batch_blocked``'s carry (L=1,
+    ``select_pad_geometry(max_bins, d)`` slot padding, ``max_items`` item
+    rows): slot closes at ``SCORE_NEG`` (virgin), tags ``TAG_VIRGIN``,
+    placements -1, PPE alpha / adaptive err at 1.0, RCP base slot -1 -
+    so ``kernels.ops.fitscore_replay_dispatch`` can replay event blocks
+    against it exactly as the sweep scan does, carry aliased in -> out.
+    The hybrid family is clairvoyant-only (its key table is built from the
+    whole instance up front) and has no live-carry form."""
+    spec = policy_spec(policy)
+    fam = _KERNEL_FAMILY[spec.family]
+    assert fam != "hybrid", \
+        f"{policy!r} is clairvoyant-only (whole-instance key table); " \
+        "no live serving carry"
+    f32, i32 = jnp.float32, jnp.int32
+    Np, dpad, _, _ = select_pad_geometry(max_bins, d)
+    carry = {
+        "loads": jnp.zeros((1, Np, dpad), f32),
+        "slotf": jnp.zeros((1, Np, _fk.SLOTF_COLS), f32)
+        .at[:, :, _fk.SLOTF_CLOSES].set(NEG),
+        "sloti": jnp.zeros((1, Np, _fk.SLOTI_COLS), i32)
+        .at[:, :, _fk.SLOTI_TAG].set(TAG_VIRGIN),
+        "itemi": jnp.zeros((1, max_items, _fk.ITEMI_COLS), i32)
+        .at[:, :, _fk.ITEMI_PLACE].set(-1),
+        "sf": jnp.zeros((1, _fk.SF_COLS), f32)
+        .at[:, _fk.SF_ALPHA].set(1.0).at[:, _fk.SF_ERR].set(1.0),
+        "si": jnp.zeros((1, _fk.SI_COLS), i32)
+        .at[:, _fk.SI_BASE].set(-1),
+    }
+    if fam == "rcp":
+        carry["ragg"] = jnp.zeros((1, _fk.RAGG_ROWS, dpad), f32)
+        carry["ron"] = jnp.zeros((1, KCAT, _fk.RON_COLS), i32)
+    return carry
+
+
+def grow_live_carry(carry, max_bins: int, d: int):
+    """Pad a live carry's slot axis to the geometry of a larger pool (the
+    serving overflow-regrow rung).  New rows are virgin - zero loads,
+    ``SCORE_NEG`` closes, ``TAG_VIRGIN`` tags, zero counts - so replaying
+    any overflow-free event stream on the grown carry makes the same
+    decisions (extra free rows are only reached when the old pool would
+    have overflowed)."""
+    Np2, _, _, _ = select_pad_geometry(max_bins, d)
+    Np = carry["loads"].shape[1]
+    if Np2 <= Np:
+        return carry
+    pad = Np2 - Np
+
+    def wide(a, fill, col=None):
+        tail = jnp.zeros((1, pad) + a.shape[2:], a.dtype)
+        if col is not None:
+            tail = tail.at[:, :, col].set(fill)
+        return jnp.concatenate([a, tail], axis=1)
+
+    out = dict(carry)
+    out["loads"] = wide(carry["loads"], 0.0)
+    out["slotf"] = wide(carry["slotf"], NEG, _fk.SLOTF_CLOSES)
+    out["sloti"] = wide(carry["sloti"], TAG_VIRGIN, _fk.SLOTI_TAG)
+    return out
+
+
+def grow_live_items(carry, max_items: int):
+    """Pad a live carry's item axis (placements -1); the serving item-row
+    free list doubles through this when the fleet's in-flight population
+    outgrows the initial allocation."""
+    n = carry["itemi"].shape[1]
+    if max_items <= n:
+        return carry
+    out = dict(carry)
+    out["itemi"] = jnp.concatenate(
+        [carry["itemi"],
+         jnp.zeros((1, max_items - n, _fk.ITEMI_COLS), jnp.int32)
+         .at[:, :, _fk.ITEMI_PLACE].set(-1)], axis=1)
+    return out
+
+
 def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
                   rdeps=None, n_items=None, *, policy: str, max_bins: int,
                   backend: str = "jnp", block_events: int = 0,

@@ -153,6 +153,58 @@ def fitscore_select_block(loads, alive, open_seq, access_seq, closes, size,
         tags, policy=policy, n=n, d=d, impl=impl)
 
 
+def fitscore_replay_dispatch(carry, ev_i, ev_f, ev_size, dmask, *, policy,
+                             n, d, impl="auto"):
+    """Host wrapper over the jitted block dispatch: crosses the
+    ``kernel.dispatch_block`` fault seam, then dispatches (seam outside
+    the jit, same as the other select wrappers)."""
+    faults.fire("kernel.dispatch_block")
+    return _fitscore_replay_dispatch_jit(
+        carry, ev_i, ev_f, ev_size, dmask, policy=policy, n=n, d=d,
+        impl=impl)
+
+
+@partial(jax.jit, static_argnames=("policy", "n", "d", "impl"))
+def _fitscore_replay_dispatch_jit(carry, ev_i, ev_f, ev_size, dmask, *,
+                                  policy, n, d, impl="auto"):
+    """One T-event block of a *live* replay: the serving front end's batch
+    of pending arrivals (plus fired departures, plus ``PAD_KIND`` filler up
+    to the fixed block geometry) replayed against a persistent single-lane
+    carry (``core.jaxsim.make_live_carry``) by the event-blocked megakernel
+    - the whole block placed in a single on-chip pass, carry aliased
+    in -> out exactly as in the sweep scan.
+
+    ``policy`` is any scan policy whose family has a live-carry form
+    (score / cbd / cbdt / rcp / la / adaptive); the ``PolicySpec`` knobs
+    resolve here so the dispatcher passes one name, not nine flags.  The
+    jit cache is keyed on (policy, n, d, impl) and the event shapes, so a
+    fixed set of T geometries keeps the trace count bounded
+    (``dispatch_trace_count`` is the monitored invariant).  Returns the
+    post-block carry; placements read back from
+    ``itemi[..., ITEMI_PLACE]``, overflow from ``si[..., SI_OVERFLOW]``.
+    """
+    from ..core.jaxsim import _KERNEL_FAMILY, policy_spec   # leaf-safe
+    from ..core.algorithms.learned import LA_BINARY_SPLIT
+    from .fitscore import fitscore_replay_block
+    spec = policy_spec(policy)
+    fam = _KERNEL_FAMILY[spec.family]
+    return fitscore_replay_block(
+        carry, ev_i, ev_f, ev_size, dmask, family=fam,
+        policy=policy if fam == "score" else "first_fit", n=n, d=d,
+        large_bins=spec.large_bins, adaptive_alpha=spec.adaptive_alpha,
+        direct_sum=spec.direct_sum, la_mode=spec.la_mode,
+        la_split=LA_BINARY_SPLIT, low=spec.low, high=spec.high,
+        interpret=not _use_pallas(impl))
+
+
+def dispatch_trace_count() -> int:
+    """Jit-cache entry count of the block-dispatch entry point - the
+    serving retrace invariant (mirrors ``sweep.runner``'s
+    ``_jit_cache_entries``): after warming the fixed T geometries, mixed
+    batch sizes must be pure cache hits."""
+    return _fitscore_replay_dispatch_jit._cache_size()
+
+
 @partial(jax.jit, static_argnames=("policy", "n", "d", "impl"))
 def _fitscore_select_block_jit(loads, alive, open_seq, access_seq, closes,
                                size, pdep, now, cat=None, tags=None, *,

@@ -87,6 +87,28 @@ def counter_deltas(before: Dict[str, float]) -> Dict[str, float]:
             if v != before.get(k, 0)}
 
 
+# Default histogram bucket bounds: powers of two, sized for the serving
+# dispatch counters (batch sizes / queue depths up to the fixed-T ceiling).
+HIST_BOUNDS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+
+
+def counter_hist(name: str, value: float, bounds=HIST_BOUNDS) -> None:
+    """Histogram-style counter: one observation lands in ``<name>.le_<b>``
+    for the smallest bound >= value (``<name>.le_inf`` above the last),
+    plus ``<name>.count`` / ``<name>.sum``.  Built from plain counters so
+    histograms ride everything counters already ride - ``Results.metrics``
+    counter deltas, the bench JSON snapshot and the JSONL run log - with
+    no new export machinery."""
+    for b in bounds:
+        if value <= b:
+            counter_add(f"{name}.le_{b}")
+            break
+    else:
+        counter_add(f"{name}.le_inf")
+    counter_add(f"{name}.count")
+    counter_add(f"{name}.sum", value)
+
+
 # ------------------------------------------------------------------- spans
 
 class _NullSpan:

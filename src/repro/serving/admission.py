@@ -5,15 +5,22 @@ admission unboundedly.  ``AdmissionQueue`` is the hardening layer between
 raw traffic and the scheduler:
 
   * **bounded queue** - at most ``max_pending`` requests wait for
-    placement; beyond that, new arrivals are shed immediately
-    (``resilience.shed_queue_full``) instead of growing an unbounded
-    backlog,
+    placement.  When a new arrival would overflow the bound, queued
+    requests whose deadline already lapsed are shed first
+    (``resilience.shed_deadline``) - they could never be placed usefully
+    anyway - and only if the queue is still full of *live* requests is
+    the fresh arrival shed (``resilience.shed_queue_full``).  The two
+    counters therefore distinguish "queue full of viable work" from
+    "queue full of corpses" deterministically,
   * **per-request deadlines** - a request that waited longer than
     ``deadline`` seconds by drain time is shed
     (``resilience.shed_deadline``) rather than placed uselessly late,
   * **batched drain** - ``drain(now)`` places up to ``batch_max`` queued
     requests per call in arrival order; the caller owns the cadence
-    (every event-loop tick, every batch boundary).
+    (every event-loop tick, every batch boundary).  ``take(now)`` is the
+    batched front end's flavor: it pops the surviving requests without
+    placing them, so ``serving.dispatch.BatchedFrontEnd`` can hand the
+    whole batch to the block dispatcher as ONE kernel call.
 
 Placement itself goes through ``DVBPScheduler.place``, which sits behind
 the serving degradation ladder (``scheduler._select_guarded``) - so under
@@ -25,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Tuple
+from typing import Deque, List, Optional, Tuple
 
 from .. import obs
 from .scheduler import DVBPScheduler, Request
@@ -44,10 +51,14 @@ class AdmissionStats:
 
 
 class AdmissionQueue:
-    """Bounded FIFO admission in front of a ``DVBPScheduler``."""
+    """Bounded FIFO admission in front of a placement engine.
 
-    def __init__(self, scheduler: DVBPScheduler, max_pending: int = 1024,
-                 deadline: float = 5.0, batch_max: int = 64):
+    ``scheduler`` may be None when the queue only feeds ``take()`` (the
+    batched front end owns placement); ``drain()`` then asserts."""
+
+    def __init__(self, scheduler: Optional[DVBPScheduler],
+                 max_pending: int = 1024, deadline: float = 5.0,
+                 batch_max: int = 64):
         assert max_pending >= 1 and batch_max >= 1 and deadline > 0
         self.scheduler = scheduler
         self.max_pending = max_pending
@@ -59,9 +70,26 @@ class AdmissionQueue:
     def __len__(self) -> int:
         return len(self._pending)
 
+    def _shed_expired(self, now: float) -> int:
+        """Drop queued requests whose deadline lapsed (FIFO order, so the
+        oldest - most-expired - go first).  Returns how many were shed."""
+        n = 0
+        while self._pending and now - self._pending[0][1] > self.deadline:
+            req, t_in = self._pending.popleft()
+            self.stats.shed_deadline += 1
+            obs.counter_add("resilience.shed_deadline")
+            obs.instant("resilience.shed", rid=req.rid, why="deadline",
+                        waited=now - t_in)
+            n += 1
+        return n
+
     def submit(self, req: Request, now: float) -> bool:
-        """Enqueue a request; False means shed (queue saturated)."""
+        """Enqueue a request; False means shed (queue saturated with
+        still-viable requests).  Deadline-expired entries are evicted
+        before a fresh arrival is ever rejected."""
         self.stats.submitted += 1
+        if len(self._pending) >= self.max_pending:
+            self._shed_expired(now)
         if len(self._pending) >= self.max_pending:
             self.stats.shed_queue_full += 1
             obs.counter_add("resilience.shed_queue_full")
@@ -70,12 +98,15 @@ class AdmissionQueue:
         self._pending.append((req, now))
         return True
 
-    def drain(self, now: float) -> List[Tuple[int, int]]:
-        """Place up to ``batch_max`` queued requests; returns
-        ``[(rid, replica), ...]`` for the requests actually placed.
-        Requests whose deadline lapsed while queued are shed, not placed."""
-        placed: List[Tuple[int, int]] = []
-        budget = self.batch_max
+    def take(self, now: float, limit: Optional[int] = None
+             ) -> List[Tuple[Request, float]]:
+        """Pop up to ``limit`` (default ``batch_max``) queued requests in
+        arrival order, shedding deadline-expired entries along the way.
+        Returns the surviving ``(request, submit_time)`` pairs - the
+        batched front end's drain primitive (placement happens in the
+        block dispatcher, not here)."""
+        budget = self.batch_max if limit is None else limit
+        out: List[Tuple[Request, float]] = []
         while self._pending and budget:
             req, t_in = self._pending.popleft()
             if now - t_in > self.deadline:
@@ -84,8 +115,19 @@ class AdmissionQueue:
                 obs.instant("resilience.shed", rid=req.rid, why="deadline",
                             waited=now - t_in)
                 continue
+            out.append((req, t_in))
+            budget -= 1
+        return out
+
+    def drain(self, now: float) -> List[Tuple[int, int]]:
+        """Place up to ``batch_max`` queued requests; returns
+        ``[(rid, replica), ...]`` for the requests actually placed.
+        Requests whose deadline lapsed while queued are shed, not placed."""
+        assert self.scheduler is not None, \
+            "drain() needs a scheduler; batched front ends use take()"
+        placed: List[Tuple[int, int]] = []
+        for req, _ in self.take(now):
             idx = self.scheduler.place(req, now)
             placed.append((req.rid, idx))
             self.stats.placed += 1
-            budget -= 1
         return placed

@@ -25,7 +25,8 @@ on fp32-exact sizes (tests/test_serving.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -43,6 +44,38 @@ _DEVICE_POLICIES = ("first_fit", "best_fit", "mru", "greedy",
 # category-structured policies with an on-device masked select
 _DEVICE_CATEGORY_POLICIES = ("cbd", "cbdt")
 
+# Demand-vector memo: requests quantize to a small set of (prompt, decode,
+# caps) keys (prompt/decode lengths are integers, capacities are fixed per
+# fleet), so the hot admission path - every submit/place and the
+# serving_requests workload adapter - mostly re-derives vectors it already
+# built.  Same shape as the sweep's content-digest event-sequence LRU
+# (``sweep.batching._EVSEQ_CACHE``): bounded OrderedDict with hit/miss
+# counters (``serving.size_memo_hit`` / ``serving.size_memo_miss``) as the
+# single stats site.  Entries are read-only so a cached vector can be
+# handed out by reference.
+_SIZE_CACHE: "OrderedDict[Tuple, np.ndarray]" = OrderedDict()
+_SIZE_CACHE_MAX = 65536
+
+
+def _demand_vector(prompt_len: int, decode_len: int,
+                   caps: "ReplicaCapacity") -> np.ndarray:
+    key = (prompt_len, decode_len, caps.slots, caps.kv_tokens,
+           caps.prefill_budget)
+    hit = _SIZE_CACHE.get(key)
+    if hit is not None:
+        _SIZE_CACHE.move_to_end(key)
+        obs.counter_add("serving.size_memo_hit")
+        return hit
+    obs.counter_add("serving.size_memo_miss")
+    kv = (prompt_len + decode_len) / caps.kv_tokens
+    size = np.array([1.0 / caps.slots, min(kv, 1.0),
+                     prompt_len / caps.prefill_budget])
+    size.flags.writeable = False
+    _SIZE_CACHE[key] = size
+    while len(_SIZE_CACHE) > _SIZE_CACHE_MAX:
+        _SIZE_CACHE.popitem(last=False)
+    return size
+
 
 @dataclasses.dataclass
 class Request:
@@ -53,9 +86,7 @@ class Request:
     predicted_decode_len: Optional[int] = None
 
     def size(self, caps: "ReplicaCapacity") -> np.ndarray:
-        kv = (self.prompt_len + self.decode_len) / caps.kv_tokens
-        return np.array([1.0 / caps.slots, min(kv, 1.0),
-                         self.prompt_len / caps.prefill_budget])
+        return _demand_vector(self.prompt_len, self.decode_len, caps)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,223 @@
+"""Batched admission / double-buffered block dispatch: decision parity
+with the sequential host oracle, degradation under injected faults,
+shed ordering, retrace and memoization invariants."""
+import heapq
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.resilience import faults
+from repro.serving.admission import AdmissionQueue
+from repro.serving.dispatch import (BatchedFrontEnd, BlockDispatcher,
+                                    serve_traffic)
+from repro.serving.scheduler import (DVBPScheduler, ReplicaCapacity, Request,
+                                     _demand_vector)
+from repro.serving.traffic import diurnal_requests, poisson_requests
+
+CAPS = ReplicaCapacity()
+TPS = 50.0
+
+# one kernel policy per family, paired with the host-zoo oracle policy
+FAMILY_PAIRS = [
+    ("best_fit_linf", "best_fit", {"norm": "linf"}),      # score
+    ("cbd", "cbd", {"beta": 2.0}),                        # cbd
+    ("rcp", "rcp", None),                                 # rcp
+    ("la_binary", "lifetime_alignment", {"mode": "binary"}),  # la
+    ("adaptive", "adaptive", None),                       # adaptive
+]
+
+
+def _oracle_placements(reqs, policy, kwargs):
+    """Sequential oracle: one DVBPScheduler.place per request at its
+    arrival, departures replayed in finish-time order."""
+    sched = DVBPScheduler(policy, CAPS, kwargs, tokens_per_second=TPS)
+    heap, placements = [], {}
+    for r in sorted(reqs, key=lambda x: x.arrival):
+        while heap and heap[0][0] <= r.arrival:
+            ft, rid = heapq.heappop(heap)
+            sched.finish(rid, ft)
+        placements[r.rid] = sched.place(r, r.arrival)
+        heapq.heappush(heap, (r.arrival + r.decode_len / TPS, r.rid))
+    return placements
+
+
+@pytest.mark.parametrize("kpol,hpol,kw", FAMILY_PAIRS,
+                         ids=[p[0] for p in FAMILY_PAIRS])
+def test_batch_of_one_matches_host(kpol, hpol, kw):
+    """T=1 dispatch is decision-for-decision identical to the host
+    scheduler for one policy per kernel family."""
+    reqs = poisson_requests(70, rate=50.0, seed=2, sigma_pred=0.3)
+    rep = serve_traffic(reqs, kpol, CAPS, tps=TPS, batch_max=1,
+                        impl="pallas_interpret")
+    assert rep.placements == _oracle_placements(reqs, hpol, kw)
+
+
+@pytest.mark.parametrize("kpol,hpol,kw", FAMILY_PAIRS[:2],
+                         ids=[p[0] for p in FAMILY_PAIRS[:2]])
+def test_batched_matches_sequential_oracle(kpol, hpol, kw):
+    """Blocks of T pending arrivals plus departures place exactly as the
+    sequential oracle - batching changes throughput, not decisions."""
+    reqs = poisson_requests(90, rate=50.0, seed=3, sigma_pred=0.3)
+    oracle = _oracle_placements(reqs, hpol, kw)
+    for bm in (8, 32):
+        rep = serve_traffic(reqs, kpol, CAPS, tps=TPS, batch_max=bm,
+                            impl="pallas_interpret")
+        assert rep.placements == oracle, f"batch_max={bm} diverged"
+
+
+def test_diurnal_traffic_matches_oracle():
+    reqs = diurnal_requests(60, rate=40.0, period=4.0, depth=0.8, seed=4,
+                            sigma_pred=0.3)
+    rep = serve_traffic(reqs, "best_fit_linf", CAPS, tps=TPS, batch_max=16,
+                        impl="pallas_interpret")
+    assert rep.placements == _oracle_placements(reqs, "best_fit",
+                                                {"norm": "linf"})
+
+
+def test_replica_accounting_matches_oracle():
+    """replica_seconds / opened / peak from the host mirror equal the
+    host scheduler's own stats."""
+    reqs = poisson_requests(80, rate=50.0, seed=5, sigma_pred=0.3)
+    sched = DVBPScheduler("best_fit", CAPS, {"norm": "linf"},
+                          tokens_per_second=TPS)
+    heap = []
+    for r in sorted(reqs, key=lambda x: x.arrival):
+        while heap and heap[0][0] <= r.arrival:
+            ft, rid = heapq.heappop(heap)
+            sched.finish(rid, ft)
+        sched.place(r, r.arrival)
+        heapq.heappush(heap, (r.arrival + r.decode_len / TPS, r.rid))
+    while heap:
+        ft, rid = heapq.heappop(heap)
+        sched.finish(rid, ft)
+    rep = serve_traffic(reqs, "best_fit_linf", CAPS, tps=TPS, batch_max=32,
+                        impl="pallas_interpret")
+    st = sched.stats
+    assert rep.replicas_opened == st.replicas_opened
+    assert rep.peak_replicas == st.peak_replicas
+    assert rep.replica_seconds == pytest.approx(st.replica_seconds)
+
+
+def test_degrade_ladder_fires_and_decisions_survive():
+    """An injected serving.select fault on the block rung steps the
+    ladder down (counter ticks); placements still match the oracle."""
+    reqs = poisson_requests(40, rate=50.0, seed=6, sigma_pred=0.3)
+    oracle = _oracle_placements(reqs, "best_fit", {"norm": "linf"})
+    before = obs.counters()
+    with faults.injected("serving.select:xla:1:1"):
+        rep = serve_traffic(reqs, "best_fit_linf", CAPS, tps=TPS,
+                            batch_max=8, impl="pallas_interpret")
+    delta = obs.counter_deltas(before)
+    assert rep.placements == oracle
+    assert delta.get("resilience.degrade_dispatch_block_events", 0) >= 1
+
+
+def test_carry_regrow_preserves_decisions():
+    """Overflowing the live carry grows the pool (doubling ladder) and
+    replays the in-flight blocks; decisions stay oracle-equal."""
+    reqs = poisson_requests(90, rate=400.0, seed=7, sigma_pred=0.3)
+    oracle = _oracle_placements(reqs, "best_fit", {"norm": "linf"})
+    before = obs.counters()
+    rep = serve_traffic(reqs, "best_fit_linf", CAPS, tps=TPS, batch_max=16,
+                        max_bins=2, impl="pallas_interpret")
+    delta = obs.counter_deltas(before)
+    assert rep.placements == oracle
+    assert delta.get("serving.carry_regrow", 0) >= 1
+
+
+def test_shed_deadline_before_queue_full():
+    """A full queue evicts deadline-expired entries before it ever sheds
+    a fresh arrival - the two counters are deterministic."""
+    q = AdmissionQueue(None, max_pending=2, deadline=1.0, batch_max=4)
+    assert q.submit(Request(0, 0.0, 64, 32), now=0.0)
+    assert q.submit(Request(1, 0.1, 64, 32), now=0.1)
+    # queue full; rid 0 and 1 are expired by t=2.0, so the fresh arrival
+    # must be admitted (expired head shed), NOT rejected
+    assert q.submit(Request(2, 2.0, 64, 32), now=2.0)
+    assert q.stats.shed_deadline >= 1
+    assert q.stats.shed_queue_full == 0
+    # now saturate with live requests: the fresh arrival is shed
+    assert q.submit(Request(3, 2.0, 64, 32), now=2.0)
+    assert not q.submit(Request(4, 2.1, 64, 32), now=2.1)
+    assert q.stats.shed_queue_full == 1
+
+
+def test_take_sheds_expired_and_keeps_survivors():
+    q = AdmissionQueue(None, max_pending=8, deadline=1.0, batch_max=8)
+    q.submit(Request(0, 0.0, 64, 32), now=0.0)
+    q.submit(Request(1, 1.5, 64, 32), now=1.5)
+    got = q.take(now=2.0)
+    assert [r.rid for r, _ in got] == [1]
+    assert q.stats.shed_deadline == 1
+
+
+def test_retrace_bounded_by_geometries():
+    """Padding to a fixed geometry set bounds the jit trace count: a
+    second run over the same geometries adds ZERO new traces."""
+    reqs = poisson_requests(60, rate=50.0, seed=8, sigma_pred=0.3)
+    kw = dict(tps=TPS, batch_max=8, geometries=(1, 8, 32),
+              impl="pallas_interpret")
+    serve_traffic(reqs, "best_fit_linf", CAPS, **kw)   # warm the cache
+    before = obs.counters()
+    rep = serve_traffic(reqs, "best_fit_linf", CAPS, **kw)
+    delta = obs.counter_deltas(before)
+    assert delta.get("serving.jit_trace", 0) == 0
+    assert delta.get("serving.jit_cache_hit", 0) >= 1
+    assert rep.metrics.get("serving.jit_trace", 0) == 0
+
+
+def test_demand_vector_memoized():
+    """Per-request demand vectors are content-keyed and cached; repeat
+    shapes hit the LRU (counter-verified)."""
+    before = obs.counters()
+    a = _demand_vector(128, 64, CAPS)
+    b = _demand_vector(128, 64, CAPS)
+    assert a is b                      # cached object, not a rebuild
+    assert not a.flags.writeable       # shared arrays are frozen
+    delta = obs.counter_deltas(before)
+    assert delta.get("serving.size_memo_hit", 0) >= 1
+    r = Request(0, 0.0, 128, 64)
+    np.testing.assert_array_equal(r.size(CAPS), a)
+
+
+def test_dispatch_histogram_counters_surface_in_metrics():
+    """serving.dispatch_batch_size / serving.queue_depth ride the plain
+    counter plumbing into ServeReport.metrics as histogram buckets."""
+    reqs = poisson_requests(50, rate=50.0, seed=9, sigma_pred=0.3)
+    rep = serve_traffic(reqs, "best_fit_linf", CAPS, tps=TPS, batch_max=8,
+                        impl="pallas_interpret")
+    m = rep.metrics
+    assert m.get("serving.dispatch_batch_size.count", 0) >= 1
+    assert m.get("serving.dispatch_batch_size.sum", 0) == len(reqs) * 2
+    assert any(k.startswith("serving.dispatch_batch_size.le_") for k in m)
+    assert m.get("serving.queue_depth.count", 0) >= 1
+
+
+def test_latencies_recorded_per_placed_request():
+    reqs = poisson_requests(40, rate=50.0, seed=10, sigma_pred=0.3)
+    rep = serve_traffic(reqs, "best_fit_linf", CAPS, tps=TPS, batch_max=8,
+                        impl="pallas_interpret")
+    assert rep.placed == len(reqs)
+    assert len(rep.latencies) == len(reqs)
+    assert all(x >= 0 for x in rep.latencies)
+    p50, p99 = rep.latency_quantiles()
+    assert 0 <= p50 <= p99
+
+
+def test_front_end_rejects_adaptive_alpha_policies():
+    """ppe needs real durations at departure - unsupported live."""
+    with pytest.raises(AssertionError):
+        BlockDispatcher("ppe", CAPS, TPS)
+
+
+def test_front_end_force_drains_before_finish():
+    """finish() hands queued arrivals to the dispatcher before the
+    departure, keeping the event stream in global time order."""
+    fe = BatchedFrontEnd("best_fit_linf", CAPS, tps=TPS, batch_max=64,
+                         impl="pallas_interpret")
+    fe.submit(Request(0, 0.0, 64, 32, 32), now=0.0)
+    fe.submit(Request(1, 0.1, 64, 32, 32), now=0.1)
+    fe.finish(0, now=0.5)       # rid 0 not yet dispatched: must drain first
+    fe.sync()
+    assert set(fe.placements) == {0, 1}
