@@ -169,8 +169,37 @@ def fig15_adaptive() -> List[str]:
     return out
 
 
+def fig16_consolidation() -> List[str]:
+    """BEYOND-PAPER: threshold-triggered consolidation as a scenario axis.
+
+    Every scan policy replays the suite twice through the api facade -
+    the paper's placement-only setting and its consolidating twin
+    (underload drain, threshold 0.25, 32-event planning cadence) - so the
+    figure shows which families leave drainable bins behind and how much
+    usage-time the bounded-recourse repack buys back.  Rows come in
+    ``fig16/<policy>/base`` / ``fig16/<policy>/cons`` pairs (same mean
+    performance-ratio metric as every other figure)."""
+    import time
+
+    from repro.api import Experiment, SCAN_POLICIES, Setting, instances
+    from .common import azure_suite
+    base = Setting.clairvoyant()
+    cons = base.with_consolidation("underload:t0.25:e32")
+    exp = Experiment(instances(list(azure_suite()), name="fig16"),
+                     policies=SCAN_POLICIES, settings=(base, cons))
+    t0 = time.time()
+    res = exp.run()
+    secs = (time.time() - t0) / max(len(res.rows()), 1)
+    out = []
+    for policy in SCAN_POLICIES:
+        for setting, tag in ((base, "base"), (cons, "cons")):
+            ratios = res.ratios(policy=policy, setting=setting.label())
+            out.append(box_row(f"fig16/{policy}/{tag}", ratios, secs))
+    return out
+
+
 ALL_FIGURES = [fig2_bestfit_norms, fig3_nonclairvoyant, fig4_cbdt_rho,
                fig5_nrt, fig6_cbd_beta, fig7_hybrid, fig8_clairvoyant,
                fig9_classify_error, fig10_rcp_ppe, fig11_lifetime_alignment,
                fig12_overall, fig13_huawei, fig14_uniform_errors,
-               fig15_adaptive]
+               fig15_adaptive, fig16_consolidation]

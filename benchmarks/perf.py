@@ -365,6 +365,54 @@ def sweep_batched_only(n_instances: int = 28, n_items: int = 250,
             f"{usage:.0f}"]
 
 
+def consolidate_sweep(n_instances: int = 28, n_items: int = 250,
+                      policies=("first_fit", "best_fit_l2", "greedy",
+                                "nrt_prioritized"),
+                      thresholds=(0.15, 0.25, 0.5)) -> List[str]:
+    """The consolidation axis on the CI-gate sweep grid.
+
+    ``perf/consolidate_{tag}`` times the batched sweep with the default
+    underload drain enabled (chunked replay + host planner interleave);
+    derived column: total usage time, the consolidating twin of
+    ``perf/sweep_batched_{tag}``'s derived column.
+
+    ``perf/consolidate_frontier_t{thr}`` rows sketch the churn/usage
+    frontier the paper family trades on: middle column = total migrations
+    at that drain threshold, derived = usage relative to the
+    non-consolidating baseline (< 1.0 means the drain paid for itself in
+    usage time; migrations are the price).  Asserts consolidation never
+    *increases* usage beyond rounding - the planner only executes
+    whole-bin drains that close a bin."""
+    from repro.consolidate import ConsolidationSpec
+    from repro.data import make_azure_like_suite
+    from repro.sweep import pack_instances, run_batch
+    insts = make_azure_like_suite(n_instances=n_instances, n_items=n_items,
+                                  seed=11)
+    batch = pack_instances(insts)
+    n_runs = n_instances * len(policies)
+    base = sum(float(run_batch(batch, p, max_bins=64).usage_time.sum())
+               for p in policies)
+
+    spec = ConsolidationSpec.parse("underload:t0.25:e32")
+    t0 = time.perf_counter()
+    usage = sum(float(run_batch(batch, p, max_bins=64, consolidate=spec)
+                      .usage_time.sum()) for p in policies)
+    t_cons = time.perf_counter() - t0
+    assert usage <= base * (1 + 1e-6), (usage, base)
+    tag = f"{n_instances}x{len(policies)}"
+    rows = [f"perf/consolidate_{tag},{t_cons/n_runs*1e6:.0f},{usage:.0f}"]
+    for thr in thresholds:
+        s = ConsolidationSpec.parse(f"underload:t{thr:g}:e32")
+        migs, u = 0, 0.0
+        for p in policies:
+            r = run_batch(batch, p, max_bins=64, consolidate=s)
+            migs += int(r.migrations.sum())
+            u += float(r.usage_time.sum())
+        rows.append(f"perf/consolidate_frontier_t{thr:g},{migs},"
+                    f"{u / base:.4f}")
+    return rows
+
+
 def obs_overhead(n_instances: int = 28, n_items: int = 250,
                  policies=("first_fit", "best_fit_l2", "greedy",
                            "nrt_prioritized")) -> List[str]:

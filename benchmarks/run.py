@@ -96,6 +96,7 @@ def main(argv=None) -> None:
         # the headline sweep timing (which includes compilation).
         groups = [perf.kernels, perf.jaxsim_vs_oracle, perf.serving_fleet,
                   perf.sweep_grid, perf.api_facade, perf.sweep_categories,
+                  perf.consolidate_sweep,
                   perf.obs_overhead, perf.resilience_overhead,
                   perf.sweep_retrace,
                   perf.replay_carry, perf.fitscore_step, perf.replay_block,
@@ -122,6 +123,12 @@ def main(argv=None) -> None:
                                                     policies=("cbd",
                                                               "la_binary"),
                                                     seeds=(0, 1)),
+                      # consolidation rows ride the fast JSON so CI can
+                      # gate their presence + the disabled-path usage
+                      lambda: perf.consolidate_sweep(
+                          n_instances=6, n_items=120,
+                          policies=("first_fit", "greedy"),
+                          thresholds=(0.25,)),
                       perf.replay_carry,
                       lambda: perf.fitscore_step(lanes=2, n_slots=512),
                       # the event-blocked replay rows ride the fast JSON

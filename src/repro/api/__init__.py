@@ -11,7 +11,10 @@ for running any cell of it, batched, on any backend:
     (``azure_trace``), prebuilt instances (``instances``), and serving
     request streams (``serving_requests`` - fleet capacity planning on
     the sweep engine).
-  * ``Setting`` - nonclairvoyant / clairvoyant / predicted, made explicit.
+  * ``Setting`` - nonclairvoyant / clairvoyant / predicted, made explicit;
+    ``Setting.with_consolidation("underload:t0.25")`` attaches a
+    ``ConsolidationSpec`` so the same regime replays with
+    threshold-triggered migrations as a scenario axis.
   * ``Experiment`` / ``Results`` - the facade over the batched sweep
     engine with store-backed caching and Eq. (1) ratio summaries.
 
@@ -20,6 +23,7 @@ CLI: ``python -m repro {sweep,serve,bench}``.  Legacy entry points
 ``python -m repro.sweep``) remain as thin shims; grep REPRO_API_MIGRATION
 for their breadcrumbs.
 """
+from ..consolidate import ConsolidationSpec  # noqa: F401
 from .policy import (CATEGORY_POLICIES, HOST_ONLY_POLICIES,  # noqa: F401
                      POLICIES, SCAN_POLICIES, Policy, policies,
                      policy_names)

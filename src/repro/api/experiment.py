@@ -27,6 +27,7 @@ from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .. import obs
+from ..core.jaxsim import CapacityError
 from ..core.metrics import BoxStats
 from ..obs.trace import ReplayTrace
 from ..sweep.grid import SweepSpec, run_sweep, summarize_sweep
@@ -54,7 +55,7 @@ class Results:
 
     records: Dict[str, Dict]
     _workload_by_suite: Dict[str, str]
-    _setting_by_pred: Dict[Tuple[str, str], str]
+    _setting_by_pred: Dict[Tuple[str, str, str], str]
     metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
     traces: Dict[str, ReplayTrace] = dataclasses.field(default_factory=dict)
 
@@ -65,7 +66,8 @@ class Results:
             r["workload"] = self._workload_by_suite.get(r["suite"],
                                                         r["suite"])
             r["setting"] = self._setting_by_pred.get(
-                (r["suite"], r["pred"]), r["pred"])
+                (r["suite"], r["pred"], r.get("consolidate", "none")),
+                r["pred"])
             out.append(r)
         return out
 
@@ -161,12 +163,20 @@ class Experiment:
         preds = {tuple(wl.pred_model(s) for s in self.settings)
                  for wl in workloads}
         assert len(preds) == 1, "workloads disagree on prediction models"
+        # dedup prediction models AND consolidation scenarios, preserving
+        # order; settings mixing both axes expand to the cross product in
+        # run_sweep and run()'s keep-filter trims back to the requested
+        # (pred, consolidation) pairs
+        pred_list = list(OrderedDict.fromkeys(preds.pop()))
+        cons = tuple(OrderedDict.fromkeys(
+            s.consolidation for s in self.settings))
         return SweepSpec(
             suites=tuple(wl.suite() for wl in workloads),
             policies=tuple(p.name for p in self.policies),
-            predictions=preds.pop(),
+            predictions=tuple(pred_list),
             seeds=self.seeds, max_bins=self.max_bins,
-            max_bins_cap=self.max_bins_cap)
+            max_bins_cap=self.max_bins_cap,
+            consolidations=cons)
 
     def _spec_groups(self):
         """Workloads sharing prediction models run as ONE multi-suite
@@ -220,19 +230,38 @@ class Experiment:
                                     checkpoint_every=checkpoint_every)
                 # run_sweep returns everything the shared store file holds
                 # for these suites; Results only reports THIS experiment's
-                # cells
-                suites = {wl.suite().label() for wl in wls}
-                preds = {p.label() for p in spec.predictions}
-                keep = lambda r: (r["suite"] in suites
+                # cells - exactly the requested (pred, consolidation)
+                # pairs, not the engine's cross product
+                want = {(wl.suite().label(), wl.pred_model(s).label(),
+                         s.consolidation.canonical())
+                        for wl in wls for s in self.settings}
+                keep = lambda r: ((r["suite"], r["pred"],
+                                   r.get("consolidate", "none")) in want
                                   and r["policy"] in polnames
-                                  and r["pred"] in preds
                                   and r["seed"] in self.seeds)
                 records = {k: r for k, r in records.items() if keep(r)}
+                wlmap = {wl.suite().label(): wl.label() for wl in wls}
+                for r in records.values():
+                    if r["overflowed"]:
+                        raise CapacityError(
+                            f"slot pool exhausted at max_bins="
+                            f"{r['max_bins']} (cap {self.max_bins_cap}) "
+                            f"for workload "
+                            f"{wlmap.get(r['suite'], r['suite'])!r} "
+                            f"instance {r['instance']!r}, policy "
+                            f"{r['policy']!r}, setting {r['pred']!r}"
+                            + (f"+{r['consolidate']}"
+                               if "consolidate" in r else "")
+                            + "; raise max_bins_cap or shrink the "
+                            "workload",
+                            policy=r["policy"], max_bins=r["max_bins"],
+                            instance=r["instance"])
                 res.merge(Results(
                     records,
-                    {wl.suite().label(): wl.label() for wl in wls},
-                    {(wl.suite().label(), wl.pred_model(s).label()):
-                     s.label() for wl in wls for s in self.settings},
+                    wlmap,
+                    {(wl.suite().label(), wl.pred_model(s).label(),
+                      s.consolidation.canonical()): s.label()
+                     for wl in wls for s in self.settings},
                     traces={k: t for k, t in traces.items()
                             if k in records}))
         res.metrics = obs.counter_deltas(counters0)

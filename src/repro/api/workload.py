@@ -48,6 +48,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..consolidate import ConsolidationSpec
 from ..core.types import Instance
 from ..serving.scheduler import ReplicaCapacity, Request
 from ..sweep.grid import PredModel, SuiteSpec
@@ -61,10 +62,13 @@ SETTING_KINDS = ("nonclairvoyant", "clairvoyant", "predicted")
 
 @dataclasses.dataclass(frozen=True)
 class Setting:
-    """One information regime (see module docstring)."""
+    """One information regime (see module docstring), optionally with a
+    consolidation scenario attached (``with_consolidation``): the same
+    information regime replayed with threshold-triggered migrations."""
 
     kind: str = "clairvoyant"
     model: Optional[PredModel] = None   # predicted only; None == attached
+    consolidation: ConsolidationSpec = ConsolidationSpec()
 
     def __post_init__(self):
         assert self.kind in SETTING_KINDS, self.kind
@@ -75,6 +79,14 @@ class Setting:
                 "Setting.predicted needs a noisy PredModel " \
                 "(lognormal/uniform); use clairvoyant()/nonclairvoyant() " \
                 "for the exact settings"
+
+    def with_consolidation(self,
+                           cons: "ConsolidationSpec | str") -> "Setting":
+        """The same setting with consolidation enabled, e.g.
+        ``Setting.clairvoyant().with_consolidation("underload:t0.25")``."""
+        if isinstance(cons, str):
+            cons = ConsolidationSpec.parse(cons)
+        return dataclasses.replace(self, consolidation=cons)
 
     @classmethod
     def nonclairvoyant(cls) -> "Setting":
@@ -98,18 +110,24 @@ class Setting:
     def parse(cls, s: "Setting | str") -> "Setting":
         if isinstance(s, Setting):
             return s
-        if s in ("nonclairvoyant", "clairvoyant"):
-            return cls(s)
-        if s == "predicted":
-            return cls.predicted()
-        raise KeyError(f"unknown setting {s!r}; known: {SETTING_KINDS} "
-                       "(predicted variants need Setting.predicted(...))")
+        base, _, cons = s.partition("+")
+        if base in ("nonclairvoyant", "clairvoyant"):
+            out = cls(base)
+        elif base == "predicted":
+            out = cls.predicted()
+        else:
+            raise KeyError(f"unknown setting {s!r}; known: {SETTING_KINDS} "
+                           "(predicted variants need Setting.predicted(...); "
+                           "'+consspec' attaches consolidation)")
+        return out.with_consolidation(cons) if cons else out
 
     def label(self) -> str:
-        if self.kind != "predicted":
-            return self.kind
-        return "predicted:" + (self.model.label() if self.model else
-                               "attached")
+        base = self.kind if self.kind != "predicted" else \
+            "predicted:" + (self.model.label() if self.model else
+                            "attached")
+        if self.consolidation.enabled:
+            base += f"+{self.consolidation.canonical()}"
+        return base
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,36 @@
+"""repro.consolidate - threshold-triggered consolidation as a scenario axis.
+
+The paper evaluates placement-only MinUsageTime DVBP policies; real
+operators also *repack*: items can be migrated off nearly-empty bins so
+those bins close earlier, trading migration churn for usage time (bounded
+recourse, cf. Murhekar et al.; repeated repacking of the live set, cf.
+Bellur et al.).  This package makes that a first-class axis over the whole
+replay stack:
+
+  * a third event kind ``MIGRATE`` (``kernels.fitscore.MIGRATE_KIND``)
+    understood by both the jnp reference scan and the event-blocked
+    megakernel: a full departure application (learning updates skipped)
+    followed by the arrival machinery on the post-departure carry, with
+    the source slot excluded from the select,
+  * a host-side planner (:mod:`.planner`) that inspects the live carry
+    between scan chunks and emits MIGRATE events - shared verbatim by the
+    batched driver and the sequential oracle so the two stay
+    decision-for-decision equal,
+  * :class:`~repro.consolidate.spec.ConsolidationSpec` - the knob set
+    (none / underload drain / periodic sweep, load-fraction threshold,
+    per-lane migration budget, per-migration cost, planning cadence),
+  * :func:`~repro.consolidate.driver.consolidated_replay` - chunked
+    batched replay with interleaved planning,
+  * :func:`~repro.consolidate.oracle.run_consolidating` - the sequential
+    consolidating host oracle (parity reference).
+
+Churn counters: ``consolidate.migrations``, ``consolidate.bins_closed``,
+``consolidate.budget_exhausted`` (see ``repro.obs``).
+"""
+from .spec import ConsolidationSpec
+from .planner import PlanResult, plan_migrations, should_plan
+from .driver import consolidated_replay
+from .oracle import run_consolidating
+
+__all__ = ["ConsolidationSpec", "PlanResult", "plan_migrations",
+           "should_plan", "consolidated_replay", "run_consolidating"]

@@ -142,3 +142,7 @@ class AdaptiveSwitch(Algorithm):
             return   # open-ended stream: no ground-truth duration to score
         rdur = float(self.inst.departures[item] - self.inst.arrivals[item])
         self.estimator.observe(rdur, self._pdur[item])
+
+    def on_migrated_out(self, item: int, idx: int, now: float,
+                        size: np.ndarray):
+        pass   # a migration is not a departure: no error observation

@@ -139,7 +139,10 @@ class _HybridBase(Algorithm):
             key = (cls, i)
         else:
             width = 2.0 ** j
-            c = int(math.floor(arr.now / width))
+            # consolidation re-places carry their original arrival clock
+            # (``MigrantArrival.orig_now``): the arrival window was fixed
+            # when the item first arrived
+            c = int(math.floor(getattr(arr, "orig_now", arr.now) / width))
             key = (cls, i, c)
         return key, i, cls
 

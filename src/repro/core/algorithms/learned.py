@@ -197,7 +197,9 @@ class _RCPBase(Algorithm):
         self._agg_base = np.zeros(self.pool.d)
         self._base_idx = -1
 
-    def on_departed(self, item: int, idx: int, now: float, size: np.ndarray):
+    def _remove_item(self, item: int, size: np.ndarray):
+        """Aggregate bookkeeping for an item leaving its bin (departure or
+        migration): location decrements and the category turn-OFF check."""
         cat, loc, pdur, _ = self._items.pop(item)
         if loc == "G":
             self._agg_general[cat] = np.maximum(
@@ -210,10 +212,19 @@ class _RCPBase(Algorithm):
             if self._on.get(cat, False) and \
                     float(self._agg_catbins[cat].max()) < 0.5:
                 self._on[cat] = False   # category load fell low: turn OFF
+        return pdur
+
+    def on_departed(self, item: int, idx: int, now: float, size: np.ndarray):
+        pdur = self._remove_item(item, size)
         if self.adaptive_alpha and pdur is not None:
             # guess-and-double (PPE, [14]): alpha = pow2_ceiling(max err)
             rdur = float(self.inst.departures[item] - self.inst.arrivals[item])
             self._estimator.observe(rdur, pdur)
+
+    def on_migrated_out(self, item: int, idx: int, now: float,
+                        size: np.ndarray):
+        # no error observation: the item has not actually departed
+        self._remove_item(item, size)
 
     def on_closed(self, idx: int, now: float):
         if idx == self._base_idx:

@@ -75,7 +75,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.fitscore import (ARRIVAL_KIND, DEPARTURE_KIND, F32_EPS, IBIG,
-                                KCAT, LOC_B, LOC_C, LOC_G, LOC_L, PAD_KIND,
+                                KCAT, LOC_B, LOC_C, LOC_G, LOC_L,
+                                MIGRATE_KIND, PAD_KIND,
                                 SCORE_BIG, SCORE_NEG, SELECT_POLICIES,
                                 TAG_BASE, TAG_GENERAL, TAG_LARGE, TAG_NONE,
                                 TAG_VIRGIN, fitscore_replay_block,
@@ -488,7 +489,7 @@ def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
                           arrivals, rdeps, n_items, *, policy: str,
                           max_bins: int, backend: str, block_events: int,
                           carry0=None, return_carry: bool = False,
-                          ev_extra=None):
+                          ev_extra=None, migrate: bool = False):
     """Event-blocked replay: a short ``lax.scan`` over blocks of ``T``
     events, each block processed entirely on-chip by
     ``kernels.fitscore.fitscore_replay_block`` with the packed carry
@@ -595,7 +596,7 @@ def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
             adaptive_alpha=spec.adaptive_alpha,
             direct_sum=spec.direct_sum, la_mode=spec.la_mode,
             la_split=LA_BINARY_SPLIT, low=spec.low, high=spec.high,
-            interpret=(backend == "pallas_interpret"))
+            migrate=migrate, interpret=(backend == "pallas_interpret"))
         return c, None
 
     carry, _ = jax.lax.scan(step, carry, xs)
@@ -692,7 +693,8 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
                   rdeps=None, n_items=None, *, policy: str, max_bins: int,
                   backend: str = "jnp", block_events: int = 0,
                   trace_level: int = 0, carry0=None,
-                  return_carry: bool = False, ev_extra=None):
+                  return_carry: bool = False, ev_extra=None,
+                  migrate: bool = False):
     """``L`` lanes' event replays in lockstep: one scan over the event
     *index* whose step processes every lane at once, so the arrival scoring
     is a single (L, slots, d) op - on TPU the fused
@@ -725,6 +727,13 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
     per-event extra streams (which must be precomputed on the *full* event
     axis - RCP's distinct-category cumsum cannot restart per segment).
     See ``resilience.checkpoint.checkpointed_replay``.
+
+    ``migrate=True`` additionally compiles the MIGRATE event branch
+    (consolidation: a full departure application with the learning updates
+    skipped, then the arrival machinery on the post-departure state with
+    the item's source slot excluded from the select).  ``migrate=False``
+    builds the exact pre-MIGRATE graph, so non-consolidating replays pay
+    nothing.  See ``repro.consolidate``.
     """
     assert not (return_carry and trace_level), \
         "checkpointed replay does not stack decision traces"
@@ -738,7 +747,7 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
             sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps,
             n_items, policy=policy, max_bins=max_bins, backend=backend,
             block_events=block_events, carry0=carry0,
-            return_carry=return_carry, ev_extra=ev_extra)
+            return_carry=return_carry, ev_extra=ev_extra, migrate=migrate)
     spec = policy_spec(policy)
     L, n_max, d = sizes.shape
     f32, i32 = jnp.float32, jnp.int32
@@ -808,112 +817,20 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
         closes_dep = closes.at[lanes, b_dep].set(
             jnp.where(closing, NEG, closes[lanes, b_dep]))
 
-        # ---- the placement decision + category-state deltas
-        cat_arr = dict(cat)   # category state if this event is an arrival
-        cat_dep = dict(cat)   # ... if it is a departure
-        sel = lambda base, cmask=None: do_select(
-            base, loads, counts, alive, open_seq, access_seq, closes, size,
-            pdep_j, t, cmask)
+        # ---- departure-side category deltas
+        cat_dep = dict(cat)   # category state if this event is a departure
 
-        if spec.family == "score":
-            b, found, no_free = sel(policy)
-
-        elif spec.family in ("cbd", "cbdt"):
-            # First Fit within the item's duration/departure class
-            catj = g(consts["cat"])
-            b, found, no_free = sel("first_fit",
-                                    cat["tag"] == catj[:, None])
-            cat_arr["tag"] = cat["tag"].at[lanes, b].set(
-                jnp.where(found, cat["tag"][lanes, b], catj))
-
-        elif spec.family == "hybrid":
-            keyj, thrj, clsj = g(consts["key"]), g(consts["thr"]), \
-                g(consts["cls"])
-            after = cat["agg"][lanes, keyj] + size_d
-            norm = jnp.take_along_axis(after, clsj[:, None], axis=1)[:, 0] \
-                if spec.direct_sum else jnp.max(after, axis=1)
-            is_gen = norm <= thrj + F32_EPS
-            wanted = jnp.where(is_gen, clsj, d + keyj)
-            b, found, no_free = sel("first_fit",
-                                    cat["tag"] == wanted[:, None])
-            cat_arr["tag"] = cat["tag"].at[lanes, b].set(
-                jnp.where(found, cat["tag"][lanes, b], wanted))
-            cat_arr["agg"] = cat["agg"].at[lanes, keyj].add(
-                jnp.where(is_gen[:, None], size_d, 0.0))
-            cat_arr["ingen"] = cat["ingen"].at[lanes, j].set(is_gen)
+        if spec.family == "hybrid":
+            keyj = g(consts["key"])
             wasg = g(cat["ingen"])
             cat_dep["agg"] = cat["agg"].at[lanes, keyj].set(
                 jnp.maximum(cat["agg"][lanes, keyj] -
                             jnp.where(wasg[:, None], size_d, 0.0), 0.0))
 
         elif spec.family == "rcp":
-            catj, largej = g(consts["cat"]), g(consts["large"])
-            x = jnp.maximum(ev[3], 1).astype(f32)    # distinct cats so far
-            coef = cat["alpha"] if spec.adaptive_alpha else 1.0
-            thr = coef / jnp.sqrt(x)
-            fits_gen = jnp.max(cat["agg_gen"][lanes, catj] + size_d,
-                               axis=1) <= thr + F32_EPS
-            has_base = cat["base"] >= 0
-            base_loads = loads[lanes, jnp.maximum(cat["base"], 0)]
-            base_fits = jnp.where(
-                has_base,
-                jnp.all(size <= 1.0 - base_loads + F32_EPS, axis=1), True)
-            is_on = cat["on"][lanes, catj]
-            d_large = largej if spec.large_bins else jnp.zeros(L, bool)
-            d_gen = ~d_large & fits_gen
-            d_cat = ~d_large & ~fits_gen & is_on
-            d_base = ~d_large & ~fits_gen & ~is_on & base_fits
-            d_catf = ~d_large & ~fits_gen & ~is_on & ~base_fits  # "C!"
-            wanted = jnp.where(
-                d_gen, TAG_GENERAL,
-                jnp.where(d_cat, catj,
-                          jnp.where(d_base & has_base, TAG_BASE, TAG_NONE)))
-            b, found, no_free = sel("first_fit",
-                                    cat["tag"] == wanted[:, None])
-            open_tag = jnp.where(
-                d_large, TAG_LARGE,
-                jnp.where(d_gen, TAG_GENERAL,
-                          jnp.where(d_base, TAG_BASE, catj)))
-            tag_a = cat["tag"].at[lanes, b].set(
-                jnp.where(found, cat["tag"][lanes, b], open_tag))
-            new_base = d_base & ~has_base
-            base_a = jnp.where(new_base, b, cat["base"])
-            agg_base_a = jnp.where(new_base[:, None], 0.0,
-                                   cat["agg_base"]) + \
-                jnp.where(d_base[:, None], size_d, 0.0)
-            agg_bcat_a = jnp.where(new_base[:, None, None], 0.0,
-                                   cat["agg_bcat"]).at[lanes, catj].add(
-                jnp.where(d_base[:, None], size_d, 0.0))
-            agg_gen_a = cat["agg_gen"].at[lanes, catj].add(
-                jnp.where(d_gen[:, None], size_d, 0.0))
-            agg_cat_a = cat["agg_cat"].at[lanes, catj].add(
-                jnp.where((d_cat | d_catf)[:, None], size_d, 0.0))
-            on_a = cat["on"].at[lanes, catj].set(
-                cat["on"][lanes, catj] | d_catf)
-            loc_a = cat["loc"].at[lanes, j].set(
-                jnp.where(d_gen, LOC_G,
-                          jnp.where(d_base, LOC_B,
-                                    jnp.where(d_large, LOC_L, LOC_C))))
-            # base conversion (paper §VI-A): base exceeded 1/2 -> becomes a
-            # category bin of its dominant member category, which turns ON
-            conv = d_base & (jnp.max(agg_base_a, axis=1) > 0.5)
-            dom = jnp.argmax(jnp.max(agg_bcat_a, axis=2), axis=1) \
-                .astype(i32)
-            tag_a = tag_a.at[lanes, b].set(
-                jnp.where(conv, dom, tag_a[lanes, b]))
-            on_a = on_a.at[lanes, dom].set(on_a[lanes, dom] | conv)
-            agg_cat_a = jnp.where(conv[:, None, None],
-                                  agg_cat_a + agg_bcat_a, agg_cat_a)
-            loc_a = jnp.where(conv[:, None] & (loc_a == LOC_B), LOC_C,
-                              loc_a)
-            cat_arr.update(
-                tag=tag_a, on=on_a, loc=loc_a, agg_gen=agg_gen_a,
-                agg_cat=agg_cat_a,
-                agg_base=jnp.where(conv[:, None], 0.0, agg_base_a),
-                agg_bcat=jnp.where(conv[:, None, None], 0.0, agg_bcat_a),
-                base=jnp.where(conv, -1, base_a))
-            # departure branch: per-location aggregate decrements, category
-            # turn-OFF below 1/2, alpha guess-and-double, base-close reset
+            # per-location aggregate decrements, category turn-OFF below
+            # 1/2, alpha guess-and-double, base-close reset
+            catj = g(consts["cat"])
             locd = g(cat["loc"])
             sz_g = jnp.where((locd == LOC_G)[:, None], size_d, 0.0)
             sz_b = jnp.where((locd == LOC_B)[:, None], size_d, 0.0)
@@ -924,7 +841,8 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
             agg_cat_d = cat["agg_cat"].at[lanes, catj].set(new_cat)
             turn_off = (locd == LOC_C) & cat["on"][lanes, catj] & \
                 (jnp.max(new_cat, axis=1) < 0.5)
-            base_closed = closing & has_base & (b_dep == cat["base"])
+            base_closed = closing & (cat["base"] >= 0) & \
+                (b_dep == cat["base"])
             cat_dep.update(
                 agg_gen=agg_gen_d, agg_cat=agg_cat_d,
                 on=cat["on"].at[lanes, catj].set(
@@ -941,61 +859,202 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
                 alpha=jnp.maximum(cat["alpha"], g(consts["p2err"]))
                 if spec.adaptive_alpha else cat["alpha"])
 
-        elif spec.family == "la":
-            # Best Fit (l_inf) within the item's lifetime class; bins are
-            # classed by predicted remaining usage (carried ``closes``
-            # clamped to now); class-0 items fill leftover capacity
-            # anywhere, others fall back to foreign-class bins
-            icat = g(consts["cat"])
-            remt = jnp.maximum(closes, t[:, None]) - t[:, None]
-            bincat = la_class_jnp(remt, spec.la_mode)
-            same = bincat == icat[:, None]
-            short = (icat == 0)[:, None]
-            ra = sel("best_fit_linf", jnp.where(short, True, same))
-            rb = sel("best_fit_linf", jnp.where(short, False, ~same))
-            found = ra[1] | rb[1]
-            b = jnp.where(ra[1], ra[0], rb[0]).astype(i32)
-            no_free = ra[2]
+        elif spec.family == "adaptive":
+            cat_dep["err"] = jnp.maximum(cat["err"], g(consts["errmax"]))
 
-        else:   # adaptive: regime-switch between three Any Fit policies on
-            # the carried running departure error
-            err = cat["err"]
-            k = jnp.where(err < spec.low, 0,
-                          jnp.where(err < spec.high, 1, 2))
-            r0, r1, r2 = sel("nrt_prioritized"), sel("greedy"), \
-                sel("first_fit")
-            b = jnp.where(k == 0, r0[0],
-                          jnp.where(k == 1, r1[0], r2[0])).astype(i32)
-            found = jnp.where(k == 0, r0[1],
-                              jnp.where(k == 1, r1[1], r2[1]))
-            no_free = r0[2]
-            cat_dep["err"] = jnp.maximum(err, g(consts["errmax"]))
+        # ---- the placement decision + arrival-side category deltas.
+        # ``arrive`` reads only its state arguments, so the same machinery
+        # serves plain arrivals (pre-event state) and - under
+        # ``migrate=True`` - MIGRATE re-places (post-departure state with
+        # the source slot excluded from the select).
+        def arrive(core_s, cat_s, excl=None):
+            (loads_s, counts_s, alive_s, open_seq_s, access_seq_s,
+             closes_s, open_time_s, placements_s, usage_s, seq_s,
+             opened_s, overflow_s) = core_s
+            if excl is None:
+                fold = lambda cm: cm
+            else:
+                em = jnp.arange(Np)[None, :] != excl[:, None]
+                fold = lambda cm: em if cm is None else cm & em
+            sel = lambda base, cmask=None: do_select(
+                base, loads_s, counts_s, alive_s, open_seq_s, access_seq_s,
+                closes_s, size, pdep_j, t, fold(cmask))
+            cat_a = dict(cat_s)   # category state after this placement
 
-        # ---- arrival branch: shared bin bookkeeping
-        b = b.astype(i32)
-        overflow_arr = overflow | (~found & no_free)
-        loads_arr = loads.at[lanes, b].add(size)
-        counts_arr = counts.at[lanes, b].add(1)
-        alive_arr = alive.at[lanes, b].set(True)
-        open_seq_arr = open_seq.at[lanes, b].set(
-            jnp.where(found, open_seq[lanes, b], seq))
-        open_time_arr = open_time.at[lanes, b].set(
-            jnp.where(found, open_time[lanes, b], t))
-        access_arr = access_seq.at[lanes, b].set(seq)
-        closes_arr = closes.at[lanes, b].set(
-            jnp.maximum(jnp.where(found, closes[lanes, b], NEG),
-                        jnp.maximum(pdep_j, t)))
-        placements_arr = placements.at[lanes, j].set(b)
-        opened_arr = opened + jnp.where(found, 0, 1)
+            if spec.family == "score":
+                b, found, no_free = sel(policy)
 
-        new = pick(
-            is_arr,
-            ((loads_arr, counts_arr, alive_arr, open_seq_arr, access_arr,
-              closes_arr, open_time_arr, placements_arr, usage, seq + 1,
-              opened_arr, overflow_arr), cat_arr),
-            ((loads_dep, counts_dep, alive_dep, open_seq, access_seq,
-              closes_dep, open_time, placements, usage_dep, seq, opened,
-              overflow), cat_dep))
+            elif spec.family in ("cbd", "cbdt"):
+                # First Fit within the item's duration/departure class
+                catj = g(consts["cat"])
+                b, found, no_free = sel("first_fit",
+                                        cat_s["tag"] == catj[:, None])
+                cat_a["tag"] = cat_s["tag"].at[lanes, b].set(
+                    jnp.where(found, cat_s["tag"][lanes, b], catj))
+
+            elif spec.family == "hybrid":
+                keyj, thrj, clsj = g(consts["key"]), g(consts["thr"]), \
+                    g(consts["cls"])
+                after = cat_s["agg"][lanes, keyj] + size_d
+                norm = jnp.take_along_axis(
+                    after, clsj[:, None], axis=1)[:, 0] \
+                    if spec.direct_sum else jnp.max(after, axis=1)
+                is_gen = norm <= thrj + F32_EPS
+                wanted = jnp.where(is_gen, clsj, d + keyj)
+                b, found, no_free = sel("first_fit",
+                                        cat_s["tag"] == wanted[:, None])
+                cat_a["tag"] = cat_s["tag"].at[lanes, b].set(
+                    jnp.where(found, cat_s["tag"][lanes, b], wanted))
+                cat_a["agg"] = cat_s["agg"].at[lanes, keyj].add(
+                    jnp.where(is_gen[:, None], size_d, 0.0))
+                cat_a["ingen"] = cat_s["ingen"].at[lanes, j].set(is_gen)
+
+            elif spec.family == "rcp":
+                catj, largej = g(consts["cat"]), g(consts["large"])
+                x = jnp.maximum(ev[3], 1).astype(f32)  # distinct cats so far
+                coef = cat_s["alpha"] if spec.adaptive_alpha else 1.0
+                thr = coef / jnp.sqrt(x)
+                fits_gen = jnp.max(cat_s["agg_gen"][lanes, catj] + size_d,
+                                   axis=1) <= thr + F32_EPS
+                has_base = cat_s["base"] >= 0
+                base_loads = loads_s[lanes, jnp.maximum(cat_s["base"], 0)]
+                base_fits = jnp.where(
+                    has_base,
+                    jnp.all(size <= 1.0 - base_loads + F32_EPS, axis=1),
+                    True)
+                if excl is not None:
+                    # migrate off the base bin itself: the re-place must
+                    # not target its own source (the oracle's source bin is
+                    # infeasible during the select)
+                    base_fits = base_fits & (cat_s["base"] != excl)
+                is_on = cat_s["on"][lanes, catj]
+                d_large = largej if spec.large_bins else jnp.zeros(L, bool)
+                d_gen = ~d_large & fits_gen
+                d_cat = ~d_large & ~fits_gen & is_on
+                d_base = ~d_large & ~fits_gen & ~is_on & base_fits
+                d_catf = ~d_large & ~fits_gen & ~is_on & ~base_fits  # "C!"
+                wanted = jnp.where(
+                    d_gen, TAG_GENERAL,
+                    jnp.where(d_cat, catj,
+                              jnp.where(d_base & has_base, TAG_BASE,
+                                        TAG_NONE)))
+                b, found, no_free = sel("first_fit",
+                                        cat_s["tag"] == wanted[:, None])
+                open_tag = jnp.where(
+                    d_large, TAG_LARGE,
+                    jnp.where(d_gen, TAG_GENERAL,
+                              jnp.where(d_base, TAG_BASE, catj)))
+                tag_a = cat_s["tag"].at[lanes, b].set(
+                    jnp.where(found, cat_s["tag"][lanes, b], open_tag))
+                new_base = d_base & ~has_base
+                base_a = jnp.where(new_base, b, cat_s["base"])
+                agg_base_a = jnp.where(new_base[:, None], 0.0,
+                                       cat_s["agg_base"]) + \
+                    jnp.where(d_base[:, None], size_d, 0.0)
+                agg_bcat_a = jnp.where(new_base[:, None, None], 0.0,
+                                       cat_s["agg_bcat"]) \
+                    .at[lanes, catj].add(
+                        jnp.where(d_base[:, None], size_d, 0.0))
+                agg_gen_a = cat_s["agg_gen"].at[lanes, catj].add(
+                    jnp.where(d_gen[:, None], size_d, 0.0))
+                agg_cat_a = cat_s["agg_cat"].at[lanes, catj].add(
+                    jnp.where((d_cat | d_catf)[:, None], size_d, 0.0))
+                on_a = cat_s["on"].at[lanes, catj].set(
+                    cat_s["on"][lanes, catj] | d_catf)
+                loc_a = cat_s["loc"].at[lanes, j].set(
+                    jnp.where(d_gen, LOC_G,
+                              jnp.where(d_base, LOC_B,
+                                        jnp.where(d_large, LOC_L, LOC_C))))
+                # base conversion (paper §VI-A): base exceeded 1/2 ->
+                # becomes a category bin of its dominant member category,
+                # which turns ON
+                conv = d_base & (jnp.max(agg_base_a, axis=1) > 0.5)
+                dom = jnp.argmax(jnp.max(agg_bcat_a, axis=2), axis=1) \
+                    .astype(i32)
+                tag_a = tag_a.at[lanes, b].set(
+                    jnp.where(conv, dom, tag_a[lanes, b]))
+                on_a = on_a.at[lanes, dom].set(on_a[lanes, dom] | conv)
+                agg_cat_a = jnp.where(conv[:, None, None],
+                                      agg_cat_a + agg_bcat_a, agg_cat_a)
+                loc_a = jnp.where(conv[:, None] & (loc_a == LOC_B), LOC_C,
+                                  loc_a)
+                cat_a.update(
+                    tag=tag_a, on=on_a, loc=loc_a, agg_gen=agg_gen_a,
+                    agg_cat=agg_cat_a,
+                    agg_base=jnp.where(conv[:, None], 0.0, agg_base_a),
+                    agg_bcat=jnp.where(conv[:, None, None], 0.0,
+                                       agg_bcat_a),
+                    base=jnp.where(conv, -1, base_a))
+
+            elif spec.family == "la":
+                # Best Fit (l_inf) within the item's lifetime class; bins
+                # are classed by predicted remaining usage (carried
+                # ``closes`` clamped to now); class-0 items fill leftover
+                # capacity anywhere, others fall back to foreign-class bins
+                icat = g(consts["cat"])
+                remt = jnp.maximum(closes_s, t[:, None]) - t[:, None]
+                bincat = la_class_jnp(remt, spec.la_mode)
+                same = bincat == icat[:, None]
+                short = (icat == 0)[:, None]
+                ra = sel("best_fit_linf", jnp.where(short, True, same))
+                rb = sel("best_fit_linf", jnp.where(short, False, ~same))
+                found = ra[1] | rb[1]
+                b = jnp.where(ra[1], ra[0], rb[0]).astype(i32)
+                no_free = ra[2]
+
+            else:   # adaptive: regime-switch between three Any Fit
+                # policies on the carried running departure error
+                err = cat_s["err"]
+                k = jnp.where(err < spec.low, 0,
+                              jnp.where(err < spec.high, 1, 2))
+                r0, r1, r2 = sel("nrt_prioritized"), sel("greedy"), \
+                    sel("first_fit")
+                b = jnp.where(k == 0, r0[0],
+                              jnp.where(k == 1, r1[0], r2[0])).astype(i32)
+                found = jnp.where(k == 0, r0[1],
+                                  jnp.where(k == 1, r1[1], r2[1]))
+                no_free = r0[2]
+
+            # ---- arrival branch: shared bin bookkeeping
+            b = b.astype(i32)
+            overflow_arr = overflow_s | (~found & no_free)
+            loads_arr = loads_s.at[lanes, b].add(size)
+            counts_arr = counts_s.at[lanes, b].add(1)
+            alive_arr = alive_s.at[lanes, b].set(True)
+            open_seq_arr = open_seq_s.at[lanes, b].set(
+                jnp.where(found, open_seq_s[lanes, b], seq_s))
+            open_time_arr = open_time_s.at[lanes, b].set(
+                jnp.where(found, open_time_s[lanes, b], t))
+            access_arr = access_seq_s.at[lanes, b].set(seq_s)
+            closes_arr = closes_s.at[lanes, b].set(
+                jnp.maximum(jnp.where(found, closes_s[lanes, b], NEG),
+                            jnp.maximum(pdep_j, t)))
+            placements_arr = placements_s.at[lanes, j].set(b)
+            opened_arr = opened_s + jnp.where(found, 0, 1)
+            return ((loads_arr, counts_arr, alive_arr, open_seq_arr,
+                     access_arr, closes_arr, open_time_arr, placements_arr,
+                     usage_s, seq_s + 1, opened_arr, overflow_arr),
+                    cat_a, b)
+
+        core_dep = (loads_dep, counts_dep, alive_dep, open_seq, access_seq,
+                    closes_dep, open_time, placements, usage_dep, seq,
+                    opened, overflow)
+        core_arr, cat_arr, b_sel = arrive(core, cat)
+
+        new = pick(is_arr, (core_arr, cat_arr), (core_dep, cat_dep))
+        if migrate:
+            # MIGRATE = full departure application (learning updates
+            # restored: a migration is not a departure observation) then
+            # the arrival machinery on the post-departure state, source
+            # slot excluded from the select
+            is_mig = kind == MIGRATE_KIND
+            cat_migdep = dict(cat_dep)
+            if spec.family == "rcp" and spec.adaptive_alpha:
+                cat_migdep["alpha"] = cat["alpha"]
+            elif spec.family == "adaptive":
+                cat_migdep["err"] = cat["err"]
+            core_mig, cat_mig, _ = arrive(core_dep, cat_migdep, b_dep)
+            new = pick(is_mig, (core_mig, cat_mig), new)
         # padded events are no-ops: the carry passes through untouched
         carry = pick(is_pad, carry, new)
         if not trace_level:
@@ -1004,7 +1063,7 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
         # (device-side tensors - the host collector never runs in here)
         core_n, cat_n = carry
         ev_slot = jnp.where(is_pad, -1,
-                            jnp.where(is_arr, b, b_dep)).astype(i32)
+                            jnp.where(is_arr, b_sel, b_dep)).astype(i32)
         tag_n = cat_n["tag"][lanes, jnp.maximum(ev_slot, 0)] \
             if "tag" in cat_n else jnp.full((L,), -1, i32)
         ys = {"slot": ev_slot,

@@ -88,6 +88,25 @@ class Arrival:
         return None if self.pdep is None else self.pdep - self.now
 
 
+@dataclasses.dataclass(frozen=True)
+class MigrantArrival(Arrival):
+    """A consolidation re-place: an already-known item leaving its bin.
+
+    ``now`` is the migration time (scoring and bin bookkeeping happen on the
+    current clock), but categorization must stay anchored to the item's
+    original arrival - its duration class was fixed when it first arrived -
+    so ``pdur`` derives from ``orig_now``, not ``now``.  Mirrors the batched
+    scan, whose per-item category constants are computed once from the
+    original arrivals (``core.jaxsim._category_setup``).
+    """
+
+    orig_now: float = 0.0
+
+    @property
+    def pdur(self) -> Optional[float]:
+        return None if self.pdep is None else self.pdep - self.orig_now
+
+
 @dataclasses.dataclass
 class PackingResult:
     """Outcome of one engine run."""

@@ -82,6 +82,10 @@ IBIG = 2 ** 30      # int sentinel for (open_seq, row) tie-break argmins
 ARRIVAL_KIND = 1     # event kinds in the precomputed sequence
 DEPARTURE_KIND = 0
 PAD_KIND = -1        # no-op filler event (the carry passes through)
+MIGRATE_KIND = 2     # consolidation: leave current bin, re-place via the
+#                      select (replay paths gate the branch on a static
+#                      ``migrate`` flag so non-consolidating replays compile
+#                      the exact pre-MIGRATE computation)
 
 # Bin-role tags carried per slot (category tags are >= 0: the raw class for
 # CBD/CBDT/RCP, cls / d + key for Hybrid).
@@ -440,7 +444,8 @@ def replay_carry_names(family: str):
 def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
                          T: int, large_bins: bool, adaptive_alpha: bool,
                          direct_sum: bool, la_mode: str, la_split: float,
-                         low: float, high: float, nc: int, ni: int, nf: int):
+                         low: float, high: float, migrate: bool, nc: int,
+                         ni: int, nf: int):
     """One lane's block of ``T`` events, carry resident in VMEM.
 
     ``refs`` = nc carry inputs, 2+ni event int streams, 2+nf event float
@@ -501,9 +506,11 @@ def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
         pdep = evf["pdep"][0, e]
         size = size_ref[0, pl.ds(e, 1), :]                # (1, dpad)
 
-        def select(pol, cmask):
+        def select(pol, cmask, excl=None):
             """The fused placement decision on the current carry - the
             exact semantics of ``_select_kernel`` / ``_select_slot``.
+            ``excl`` (migrate re-place only) removes one slot - the item's
+            source bin - from feasibility, never from the free-slot stage.
 
             Deliberately a third expression of the shared scoring
             semantics (per-lane (Np, 1) columns here vs the tiled
@@ -519,6 +526,8 @@ def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
             feas = jnp.all(size <= 1.0 - loads2 + F32_EPS, axis=1,
                            keepdims=True) & \
                 (scol_i(SLOTI_ALIVE) > 0) & rowmask
+            if excl is not None:
+                feas = feas & (rowsN != excl)
             if cmask is not None:
                 feas = feas & cmask
 
@@ -566,8 +575,13 @@ def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
             return b.astype(i32), found, no_free
 
         # ------------------------------------------------ departure branch
-        @pl.when(kind == DEPARTURE_KIND)
-        def _dep():
+        def dep_apply(learn: bool):
+            """Remove item ``j`` from its bin: shared bin bookkeeping plus
+            the per-family aggregate decrements.  ``learn=False`` is the
+            migrate flavor - a migration is not a departure *observation*,
+            so the departure-driven learning updates (PPE's alpha
+            guess-and-double, the adaptive switch's running error) are
+            skipped."""
             b = at_item(ITEMI_PLACE, j)
             rm = rowsN == b
             cnt = scol_i(SLOTI_COUNTS) - rm.astype(i32)
@@ -620,25 +634,31 @@ def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
                 c["ragg"][0, 2 * KCAT:3 * KCAT, :] = jnp.where(
                     base_closed, 0.0, bcat)
                 c["si"][0, SI_BASE] = jnp.where(base_closed, -1, base)
-                if adaptive_alpha:
+                if adaptive_alpha and learn:
                     c["sf"][0, SF_ALPHA] = jnp.maximum(
                         c["sf"][0, SF_ALPHA], evf["p2err"][0, e])
-            elif family == "adaptive":
+            elif family == "adaptive" and learn:
                 c["sf"][0, SF_ERR] = jnp.maximum(c["sf"][0, SF_ERR],
                                                  evf["errmax"][0, e])
 
+        @pl.when(kind == DEPARTURE_KIND)
+        def _dep():
+            dep_apply(True)
+
         # -------------------------------------------------- arrival branch
-        @pl.when(kind == ARRIVAL_KIND)
-        def _arr():
+        def arr_apply(excl):
+            """Place item ``j``: the per-family decision + the shared
+            commit.  ``excl`` (migrate re-place only) keeps the select off
+            the item's source slot."""
             tag = scol_i(SLOTI_TAG)
             post = None      # family commit, needs (b, rm, found)
 
             if family == "score":
-                b, found, no_free = select(policy, None)
+                b, found, no_free = select(policy, None, excl)
 
             elif family == "cbd":
                 catj = evi["cat"][0, e]
-                b, found, no_free = select("first_fit", tag == catj)
+                b, found, no_free = select("first_fit", tag == catj, excl)
 
                 def post(b, rm, found):
                     set_scol_i(SLOTI_TAG,
@@ -657,7 +677,7 @@ def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
                     norm = jnp.max(after)
                 is_gen = norm <= thrj + F32_EPS
                 wanted = jnp.where(is_gen, clsj, d + keyj)
-                b, found, no_free = select("first_fit", tag == wanted)
+                b, found, no_free = select("first_fit", tag == wanted, excl)
 
                 def post(b, rm, found):
                     set_scol_i(SLOTI_TAG,
@@ -682,6 +702,11 @@ def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
                 base_fits = jnp.where(
                     has_base,
                     jnp.all(size <= 1.0 - base_loads + F32_EPS), True)
+                if excl is not None:
+                    # migrate off the base bin itself: the re-place must
+                    # not target its own source (matches the host oracle,
+                    # where the source bin is infeasible during the select)
+                    base_fits = base_fits & (base != excl)
                 oncol = c["ron"][0, :, 0:1]
                 is_on = jnp.sum(jnp.where(rowsK == catj, oncol, 0)) > 0
                 d_large = largej if large_bins else False
@@ -694,7 +719,7 @@ def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
                     jnp.where(d_cat, catj,
                               jnp.where(d_base & has_base, TAG_BASE,
                                         TAG_NONE)))
-                b, found, no_free = select("first_fit", tag == wanted)
+                b, found, no_free = select("first_fit", tag == wanted, excl)
 
                 def post(b, rm, found):
                     open_tag = jnp.where(
@@ -769,8 +794,8 @@ def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
                     bincat = jnp.where(remt < 1.0, 0, bexp)
                 same = bincat == icat
                 short = icat == 0
-                ra = select("best_fit_linf", same | short)
-                rb = select("best_fit_linf", (~same) & ~short)
+                ra = select("best_fit_linf", same | short, excl)
+                rb = select("best_fit_linf", (~same) & ~short, excl)
                 found = ra[1] | rb[1]
                 b = jnp.where(ra[1], ra[0], rb[0]).astype(i32)
                 no_free = ra[2]
@@ -778,9 +803,9 @@ def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
             else:   # adaptive: regime-switch on the carried departure error
                 err = c["sf"][0, SF_ERR]
                 kreg = jnp.where(err < low, 0, jnp.where(err < high, 1, 2))
-                r0 = select("nrt_prioritized", None)
-                r1 = select("greedy", None)
-                r2 = select("first_fit", None)
+                r0 = select("nrt_prioritized", None, excl)
+                r1 = select("greedy", None, excl)
+                r2 = select("first_fit", None, excl)
                 b = jnp.where(kreg == 0, r0[0],
                               jnp.where(kreg == 1, r1[0], r2[0])).astype(i32)
                 found = jnp.where(kreg == 0, r0[1],
@@ -816,6 +841,22 @@ def _replay_block_kernel(*refs, family: str, policy: str, n: int, d: int,
             c["si"][0, SI_SEQ] = seq + 1
             if post is not None:
                 post(b, rm, found)
+
+        @pl.when(kind == ARRIVAL_KIND)
+        def _arr():
+            arr_apply(None)
+
+        if migrate:
+            # consolidation: a MIGRATE event is a full departure (learning
+            # updates skipped) followed by the arrival machinery evaluated
+            # on the post-departure carry, with the source slot excluded
+            # from the select.  Compiled only when the replay carries
+            # migrations - migrate=False is the exact pre-MIGRATE kernel.
+            @pl.when(kind == MIGRATE_KIND)
+            def _mig():
+                src = at_item(ITEMI_PLACE, j)
+                dep_apply(False)
+                arr_apply(src)
         return 0
 
     jax.lax.fori_loop(0, T, body, 0)
@@ -827,7 +868,8 @@ def fitscore_replay_block(carry, ev_i, ev_f, ev_size, dmask, *, family: str,
                           adaptive_alpha: bool = False,
                           direct_sum: bool = False, la_mode: str = "binary",
                           la_split: float = 7200.0, low: float = 2.0,
-                          high: float = 16.0, interpret: bool = False):
+                          high: float = 16.0, migrate: bool = False,
+                          interpret: bool = False):
     """Replay one block of ``T`` events for ``L`` lanes entirely on-chip.
 
     ``carry`` is a dict of the packed per-lane carry arrays (see the
@@ -844,6 +886,11 @@ def fitscore_replay_block(carry, ev_i, ev_f, ev_size, dmask, *, family: str,
     carry round-trips through HBM once per *block* instead of once per
     event (the per-event fused-select path re-reads and re-writes it every
     scan step).
+
+    ``migrate=True`` additionally compiles the MIGRATE event branch
+    (consolidation: departure + masked re-place in one event); the default
+    False generates the exact migration-free kernel, so non-consolidating
+    replays pay nothing for the third event kind.
     """
     names = replay_carry_names(family)
     assert set(names) == set(carry), (names, sorted(carry))
@@ -871,8 +918,8 @@ def fitscore_replay_block(carry, ev_i, ev_f, ev_size, dmask, *, family: str,
         _replay_block_kernel, family=family, policy=policy, n=n, d=d, T=T,
         large_bins=large_bins, adaptive_alpha=adaptive_alpha,
         direct_sum=direct_sum, la_mode=la_mode, la_split=la_split, low=low,
-        high=high, nc=len(names), ni=len(REPLAY_EV_I[family]),
-        nf=len(REPLAY_EV_F[family]))
+        high=high, migrate=migrate, nc=len(names),
+        ni=len(REPLAY_EV_I[family]), nf=len(REPLAY_EV_F[family]))
     outs = pl.pallas_call(
         kernel,
         grid=(L,),

@@ -154,19 +154,22 @@ def fitscore_select_block(loads, alive, open_seq, access_seq, closes, size,
 
 
 def fitscore_replay_dispatch(carry, ev_i, ev_f, ev_size, dmask, *, policy,
-                             n, d, impl="auto"):
+                             n, d, impl="auto", migrate=False):
     """Host wrapper over the jitted block dispatch: crosses the
     ``kernel.dispatch_block`` fault seam, then dispatches (seam outside
-    the jit, same as the other select wrappers)."""
+    the jit, same as the other select wrappers).  ``migrate=True``
+    compiles the MIGRATE branch in (consolidation drain blocks); plain
+    arrival/departure blocks keep the exact non-migrating graph."""
     faults.fire("kernel.dispatch_block")
     return _fitscore_replay_dispatch_jit(
         carry, ev_i, ev_f, ev_size, dmask, policy=policy, n=n, d=d,
-        impl=impl)
+        impl=impl, migrate=migrate)
 
 
-@partial(jax.jit, static_argnames=("policy", "n", "d", "impl"))
+@partial(jax.jit, static_argnames=("policy", "n", "d", "impl", "migrate"))
 def _fitscore_replay_dispatch_jit(carry, ev_i, ev_f, ev_size, dmask, *,
-                                  policy, n, d, impl="auto"):
+                                  policy, n, d, impl="auto",
+                                  migrate=False):
     """One T-event block of a *live* replay: the serving front end's batch
     of pending arrivals (plus fired departures, plus ``PAD_KIND`` filler up
     to the fixed block geometry) replayed against a persistent single-lane
@@ -194,7 +197,7 @@ def _fitscore_replay_dispatch_jit(carry, ev_i, ev_f, ev_size, dmask, *,
         large_bins=spec.large_bins, adaptive_alpha=spec.adaptive_alpha,
         direct_sum=spec.direct_sum, la_mode=spec.la_mode,
         la_split=LA_BINARY_SPLIT, low=spec.low, high=spec.high,
-        interpret=not _use_pallas(impl))
+        migrate=migrate, interpret=not _use_pallas(impl))
 
 
 def dispatch_trace_count() -> int:

@@ -166,23 +166,23 @@ class ReplayCheckpointer:
 
 
 @partial(jax.jit, static_argnames=("policy", "max_bins", "backend",
-                                   "block_events"))
+                                   "block_events", "migrate"))
 def _segment(sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps,
              n_items, ev_extra, carry0, *, policy: str, max_bins: int,
-             backend: str, block_events: int):
+             backend: str, block_events: int, migrate: bool = False):
     from ..core.jaxsim import _replay_batch
     return _replay_batch(
         sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps, n_items,
         policy=policy, max_bins=max_bins, backend=backend,
         block_events=block_events, carry0=carry0, return_carry=True,
-        ev_extra=ev_extra)
+        ev_extra=ev_extra, migrate=migrate)
 
 
 def _input_digest(arrays, policy, max_bins, backend, block_events,
-                  seg: int) -> str:
+                  seg: int, migrate: bool = False) -> str:
     h = hashlib.blake2b(digest_size=8)
     h.update(f"{policy}|{max_bins}|{backend}|{block_events}|{seg}"
-             .encode())
+             f"|mig{int(migrate)}".encode())
     for a in arrays:
         if a is None:
             h.update(b"|none")
@@ -195,7 +195,8 @@ def _input_digest(arrays, policy, max_bins, backend, block_events,
 
 def checkpointed_replay(arrays, *, policy: str, max_bins: int,
                         backend: str, block_events: int,
-                        ckpt: ReplayCheckpointer, key: str):
+                        ckpt: ReplayCheckpointer, key: str,
+                        migrate: bool = False):
     """Replay flattened lanes in checkpointed segments.
 
     ``arrays`` is the runner's flattened-lane tuple (sizes, times, kinds,
@@ -203,7 +204,10 @@ def checkpointed_replay(arrays, *, policy: str, max_bins: int,
     (usage (L,), opened (L,), placements (L, n_max), overflow (L,)) -
     bit-identical to the unsegmented replay (tests/test_resilience.py
     asserts it per policy family).  Single-device by construction; the
-    runner's ladder handles sharding."""
+    runner's ladder handles sharding.  ``migrate=True`` compiles the
+    MIGRATE event branch in (streams carrying consolidation events);
+    the flag is part of the snapshot digest so a resume never mixes
+    graphs."""
     from ..core.jaxsim import PAD_KIND, replay_event_extras
     sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps, n_items = \
         arrays
@@ -228,7 +232,7 @@ def checkpointed_replay(arrays, *, policy: str, max_bins: int,
     extras = replay_event_extras(policy, sizes, pdeps, dmask, arrivals,
                                  rdeps, n_items, times, kinds, items)
     digest = _input_digest(arrays, policy, max_bins, backend, block_events,
-                           seg)
+                           seg, migrate)
     path = ckpt.path_for(key)
     start, carry = 0, None
     if ckpt.resume:
@@ -248,7 +252,7 @@ def checkpointed_replay(arrays, *, policy: str, max_bins: int,
             pdeps, dmask, arrivals, rdeps, n_items,
             tuple(np.asarray(x)[:, lo:hi] for x in extras), carry,
             policy=policy, max_bins=max_bins, backend=backend,
-            block_events=block_events)
+            block_events=block_events, migrate=migrate)
         out = (usage, opened, placements, overflow)
         if s + 1 < nseg:
             # snapshot BETWEEN segments: the carry is the full replay

@@ -16,11 +16,17 @@ raw traffic and the scheduler:
     ``deadline`` seconds by drain time is shed
     (``resilience.shed_deadline``) rather than placed uselessly late,
   * **batched drain** - ``drain(now)`` places up to ``batch_max`` queued
-    requests per call in arrival order; the caller owns the cadence
-    (every event-loop tick, every batch boundary).  ``take(now)`` is the
-    batched front end's flavor: it pops the surviving requests without
-    placing them, so ``serving.dispatch.BatchedFrontEnd`` can hand the
-    whole batch to the block dispatcher as ONE kernel call.
+    requests per call; the caller owns the cadence (every event-loop
+    tick, every batch boundary).  ``take(now)`` is the batched front
+    end's flavor: it pops the surviving requests without placing them,
+    so ``serving.dispatch.BatchedFrontEnd`` can hand the whole batch to
+    the block dispatcher as ONE kernel call.  Both drain in **deadline
+    order** (earliest expiry first, submission order breaking ties): a
+    request about to lapse is placed before one with slack, so mixed
+    per-request deadlines (``submit(..., deadline=...)``) shed strictly
+    less than insertion-order draining would.  With the uniform default
+    deadline, expiry order == submission order and the drain is exactly
+    the legacy FIFO.
 
 Placement itself goes through ``DVBPScheduler.place``, which sits behind
 the serving degradation ladder (``scheduler._select_guarded``) - so under
@@ -31,8 +37,8 @@ happens.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, List, Optional, Tuple
+import heapq
+from typing import List, Optional, Tuple
 
 from .. import obs
 from .scheduler import DVBPScheduler, Request
@@ -51,7 +57,10 @@ class AdmissionStats:
 
 
 class AdmissionQueue:
-    """Bounded FIFO admission in front of a placement engine.
+    """Bounded earliest-deadline-first admission in front of a placement
+    engine.  The pending set is a heap keyed (expiry, submission seq), so
+    drains pop the most urgent request first and uniform deadlines
+    degenerate to exact FIFO.
 
     ``scheduler`` may be None when the queue only feeds ``take()`` (the
     batched front end owns placement); ``drain()`` then asserts."""
@@ -65,28 +74,36 @@ class AdmissionQueue:
         self.deadline = deadline
         self.batch_max = batch_max
         self.stats = AdmissionStats()
-        self._pending: Deque[Tuple[Request, float]] = deque()
+        # (expiry, seq, request, t_in); heap order == drain order
+        self._pending: List[Tuple[float, int, Request, float]] = []
+        self._seq = 0
 
     def __len__(self) -> int:
         return len(self._pending)
 
+    def _shed_one(self, now: float) -> None:
+        _, _, req, t_in = heapq.heappop(self._pending)
+        self.stats.shed_deadline += 1
+        obs.counter_add("resilience.shed_deadline")
+        obs.instant("resilience.shed", rid=req.rid, why="deadline",
+                    waited=now - t_in)
+
     def _shed_expired(self, now: float) -> int:
-        """Drop queued requests whose deadline lapsed (FIFO order, so the
-        oldest - most-expired - go first).  Returns how many were shed."""
+        """Drop queued requests whose deadline lapsed (earliest expiry
+        first - the heap root is always the most-expired entry).  Returns
+        how many were shed."""
         n = 0
-        while self._pending and now - self._pending[0][1] > self.deadline:
-            req, t_in = self._pending.popleft()
-            self.stats.shed_deadline += 1
-            obs.counter_add("resilience.shed_deadline")
-            obs.instant("resilience.shed", rid=req.rid, why="deadline",
-                        waited=now - t_in)
+        while self._pending and now > self._pending[0][0]:
+            self._shed_one(now)
             n += 1
         return n
 
-    def submit(self, req: Request, now: float) -> bool:
+    def submit(self, req: Request, now: float,
+               deadline: Optional[float] = None) -> bool:
         """Enqueue a request; False means shed (queue saturated with
         still-viable requests).  Deadline-expired entries are evicted
-        before a fresh arrival is ever rejected."""
+        before a fresh arrival is ever rejected.  ``deadline`` overrides
+        the queue-wide patience for this request (seconds from now)."""
         self.stats.submitted += 1
         if len(self._pending) >= self.max_pending:
             self._shed_expired(now)
@@ -95,26 +112,26 @@ class AdmissionQueue:
             obs.counter_add("resilience.shed_queue_full")
             obs.instant("resilience.shed", rid=req.rid, why="queue_full")
             return False
-        self._pending.append((req, now))
+        expiry = now + (self.deadline if deadline is None else deadline)
+        heapq.heappush(self._pending, (expiry, self._seq, req, now))
+        self._seq += 1
         return True
 
     def take(self, now: float, limit: Optional[int] = None
              ) -> List[Tuple[Request, float]]:
         """Pop up to ``limit`` (default ``batch_max``) queued requests in
-        arrival order, shedding deadline-expired entries along the way.
-        Returns the surviving ``(request, submit_time)`` pairs - the
-        batched front end's drain primitive (placement happens in the
-        block dispatcher, not here)."""
+        deadline order (earliest expiry first, submission order breaking
+        ties), shedding expired entries along the way.  Returns the
+        surviving ``(request, submit_time)`` pairs - the batched front
+        end's drain primitive (placement happens in the block dispatcher,
+        not here)."""
         budget = self.batch_max if limit is None else limit
         out: List[Tuple[Request, float]] = []
         while self._pending and budget:
-            req, t_in = self._pending.popleft()
-            if now - t_in > self.deadline:
-                self.stats.shed_deadline += 1
-                obs.counter_add("resilience.shed_deadline")
-                obs.instant("resilience.shed", rid=req.rid, why="deadline",
-                            waited=now - t_in)
+            if now > self._pending[0][0]:
+                self._shed_one(now)
                 continue
+            _, _, req, t_in = heapq.heappop(self._pending)
             out.append((req, t_in))
             budget -= 1
         return out

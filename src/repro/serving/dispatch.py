@@ -100,6 +100,7 @@ class _Inflight:
     streams: tuple       # (ev_i, ev_f, ev_size) numpy, padded to T
     T: int
     rung: int            # ladder rung that dispatched it
+    migrate: bool = False  # consolidation drain block (MIGRATE events)
 
 
 class BlockDispatcher:
@@ -280,11 +281,13 @@ class BlockDispatcher:
         rungs.append(("events", "pallas_interpret"))
         return rungs
 
-    def _dispatch(self, carry, streams, T: int, start_rung: int = 0
-                  ) -> Tuple[dict, int]:
+    def _dispatch(self, carry, streams, T: int, start_rung: int = 0,
+                  migrate: bool = False) -> Tuple[dict, int]:
         """Run the degradation ladder from ``start_rung``: each rung
         crosses the ``serving.select`` fault seam once, degradable errors
-        step down with a ``resilience.degrade_dispatch_*`` counter."""
+        step down with a ``resilience.degrade_dispatch_*`` counter.
+        ``migrate=True`` compiles the MIGRATE branch in (consolidation
+        drain blocks only, so plain traffic keeps its exact graph)."""
         import jax.numpy as jnp
 
         from ..kernels import ops
@@ -307,12 +310,13 @@ class BlockDispatcher:
                         out = ops.fitscore_replay_dispatch(
                             out, evi1, evf1, ev_size[:, j:j + 1],
                             jnp.asarray(dmask), policy=self.policy,
-                            n=self.max_bins, d=self.d, impl=impl)
+                            n=self.max_bins, d=self.d, impl=impl,
+                            migrate=migrate)
                 else:
                     out = ops.fitscore_replay_dispatch(
                         carry, ev_i, ev_f, ev_size, jnp.asarray(dmask),
                         policy=self.policy, n=self.max_bins, d=self.d,
-                        impl=impl)
+                        impl=impl, migrate=migrate)
                 retraced = ops.dispatch_trace_count() - before
                 if retraced:
                     obs.counter_add("serving.jit_trace", retraced)
@@ -398,28 +402,40 @@ class BlockDispatcher:
             if ev.kind == fk.ARRIVAL_KIND:
                 slot = int(itemi[ev.row])
                 assert slot >= 0, "arrival unplaced without overflow"
-                if self._slot_count[slot] == 0:
-                    self._slot_replica[slot] = self._next_replica
-                    self._next_replica += 1
-                    self._slot_opened_at[slot] = ev.t
-                    self.replicas_opened += 1
-                    self._open_now += 1
-                    self.peak_replicas = max(self.peak_replicas,
-                                             self._open_now)
-                self._slot_count[slot] += 1
-                self._rid_slot[ev.rid] = slot
-                self.placements[ev.rid] = int(self._slot_replica[slot])
+                self._mirror_place(slot, ev)
                 t0 = self._rid_wall.pop(ev.rid, None)
                 if t0 is not None:
                     self.latencies.append(now_wall - t0)
+            elif ev.kind == fk.MIGRATE_KIND:
+                # departure half: leave the source slot (closing it if
+                # the migrant was the last occupant) ...
+                self._mirror_depart(self._rid_slot.pop(ev.rid), ev.t)
+                # ... arrival half: land on the kernel's re-place (the
+                # source slot was excluded from its select)
+                slot = int(itemi[ev.row])
+                assert slot >= 0, "migrant unplaced without overflow"
+                self._mirror_place(slot, ev)
             else:
-                slot = self._rid_slot.pop(ev.rid)
-                self._slot_count[slot] -= 1
-                if self._slot_count[slot] == 0:
-                    self.replica_seconds += \
-                        ev.t - self._slot_opened_at[slot]
-                    self._open_now -= 1
+                self._mirror_depart(self._rid_slot.pop(ev.rid), ev.t)
                 self._free.append(ev.row)
+
+    def _mirror_place(self, slot: int, ev: _Event) -> None:
+        if self._slot_count[slot] == 0:
+            self._slot_replica[slot] = self._next_replica
+            self._next_replica += 1
+            self._slot_opened_at[slot] = ev.t
+            self.replicas_opened += 1
+            self._open_now += 1
+            self.peak_replicas = max(self.peak_replicas, self._open_now)
+        self._slot_count[slot] += 1
+        self._rid_slot[ev.rid] = slot
+        self.placements[ev.rid] = int(self._slot_replica[slot])
+
+    def _mirror_depart(self, slot: int, t: float) -> None:
+        self._slot_count[slot] -= 1
+        if self._slot_count[slot] == 0:
+            self.replica_seconds += t - self._slot_opened_at[slot]
+            self._open_now -= 1
 
     def _replay_from(self, i: int, grow: bool, start_rung: int = 0) -> None:
         """Re-dispatch in-flight blocks ``i..`` from block ``i``'s saved
@@ -444,7 +460,8 @@ class BlockDispatcher:
         for k in range(i, len(self._inflight)):
             rec = self._inflight[k]
             out, rung = self._dispatch(carry, rec.streams, rec.T,
-                                       start_rung if k == i else 0)
+                                       start_rung if k == i else 0,
+                                       migrate=rec.migrate)
             rec.carry_in, rec.carry_out, rec.rung = carry, out, rung
             carry = out
         self._carry = carry
@@ -454,6 +471,76 @@ class BlockDispatcher:
         self.flush()
         while self._inflight:
             self._resolve()
+
+    # -------------------------------------------------------- consolidation
+    def consolidate(self, now: float, spec) -> Dict[str, int]:
+        """Opt-in consolidation drain pass over the live fleet.
+
+        Quiesces the pipeline (``sync``), runs the SAME planner as the
+        batched driver and the host oracle (``consolidate.plan_migrations``)
+        on the live carry's pool snapshot, and dispatches the plan as
+        MIGRATE blocks (``migrate=True`` compiles the branch in only
+        here - plain traffic keeps its exact graph).  Each migrant leaves
+        its source replica (closing it when it was the last occupant) and
+        is re-placed by the policy's own select with the source slot
+        excluded.  Resolves before returning, so ``placements`` /
+        ``replica_seconds`` reflect the drain; returns the churn stats
+        (``migrations`` / ``bins_closed`` / ``budget_exhausted``)."""
+        from ..consolidate import ConsolidationSpec, plan_migrations
+        fk = _constants()
+        if isinstance(spec, str):
+            spec = ConsolidationSpec.parse(spec)
+        assert spec.enabled, "consolidate() needs an active spec"
+        self.sync()   # plan on a quiesced carry: nothing in flight
+        sloti = np.asarray(self._carry["sloti"][0])
+        loads = np.asarray(
+            self._carry["loads"][0, :, :self.d]).astype(np.float64)
+        bin_items: Dict[int, List[int]] = {}
+        row_ev: Dict[int, _Event] = {}
+        sizes = np.zeros((self._n_items, self.d))
+        for rid in sorted(self._rid_slot):
+            arr = self._rid_arrival.get(rid)
+            assert arr is not None, \
+                "live rid without a stored arrival after sync()"
+            bin_items.setdefault(
+                int(self._rid_slot[rid]), []).append(arr.row)
+            row_ev[arr.row] = arr
+            sizes[arr.row] = arr.size
+        plan = plan_migrations(
+            loads, sloti[:, fk.SLOTI_COUNTS],
+            sloti[:, fk.SLOTI_ALIVE] > 0, sloti[:, fk.SLOTI_OSEQ],
+            bin_items, sizes, threshold=spec.threshold,
+            budget=spec.budget)
+        stats = {"migrations": len(plan.items),
+                 "bins_closed": plan.bins_closed,
+                 "budget_exhausted": plan.budget_exhausted}
+        obs.counter_add("consolidate.migrations", len(plan.items))
+        obs.counter_add("consolidate.bins_closed", plan.bins_closed)
+        obs.counter_add("consolidate.budget_exhausted",
+                        plan.budget_exhausted)
+        if not plan.items:
+            return stats
+        events = [dataclasses.replace(
+            row_ev[row], kind=fk.MIGRATE_KIND, t=now,
+            x=len(self._rcp_seen) if self.family == "rcp" else 0)
+            for row in plan.items]
+        with obs.span("serving.consolidate", policy=self.policy,
+                      migrations=len(events),
+                      bins_closed=plan.bins_closed):
+            while events:
+                chunk = events[:self.geometries[-1]]
+                del events[:len(chunk)]
+                T = self._geometry(len(chunk))
+                streams = self._streams(chunk, T)
+                out, rung = self._dispatch(self._carry, streams, T,
+                                           migrate=True)
+                self._inflight.append(_Inflight(
+                    self._carry, out, chunk, streams, T, rung,
+                    migrate=True))
+                self._carry = out
+            while self._inflight:
+                self._resolve()
+        return stats
 
 
 class BatchedFrontEnd:
@@ -532,6 +619,11 @@ class BatchedFrontEnd:
 
     def sync(self) -> None:
         self.dispatcher.sync()
+
+    def consolidate(self, now: float, spec) -> Dict[str, int]:
+        """Run one consolidation drain pass on the dispatcher (see
+        ``BlockDispatcher.consolidate``)."""
+        return self.dispatcher.consolidate(now, spec)
 
     @property
     def placements(self) -> Dict[int, int]:

@@ -19,6 +19,7 @@ import argparse
 
 from .grid import PredModel, SuiteSpec, SweepSpec, run_sweep, summarize_sweep
 from .store import SweepStore
+from ..consolidate import ConsolidationSpec
 from ..core.jaxsim import SCAN_POLICIES
 
 SUITE_DEFAULT_SEED = {"azure": 2026, "huawei": 77, "azure_trace": 0}
@@ -55,6 +56,12 @@ def main(argv=None, prog: str = "python -m repro sweep") -> None:
                     help="comma list of seeds for noisy prediction models")
     ap.add_argument("--max-bins", type=int, default=64)
     ap.add_argument("--max-bins-cap", type=int, default=8192)
+    ap.add_argument("--consolidate", nargs="+", default=["none"],
+                    help="consolidation scenario axis: none | "
+                         "underload[:THRESHOLD[:BUDGET]] | "
+                         "periodic:DT[:THRESHOLD[:BUDGET]] (tagged knobs "
+                         "t/b/e/c/dt accepted, e.g. underload:t0.25:b64); "
+                         "each value adds a grid column")
     ap.add_argument("--store", default="experiments/sweeps",
                     help="result-store directory")
     ap.add_argument("--no-store", action="store_true")
@@ -95,7 +102,9 @@ def main(argv=None, prog: str = "python -m repro sweep") -> None:
         suites=suites, policies=policies,
         predictions=tuple(_pred(t) for t in args.preds),
         seeds=tuple(int(s) for s in args.seeds.split(",")),
-        max_bins=args.max_bins, max_bins_cap=args.max_bins_cap)
+        max_bins=args.max_bins, max_bins_cap=args.max_bins_cap,
+        consolidations=tuple(ConsolidationSpec.parse(t)
+                             for t in args.consolidate))
 
     store = None if args.no_store else SweepStore(args.store)
     ckpt_dir = args.checkpoint_dir

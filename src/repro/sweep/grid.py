@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .. import obs
+from ..consolidate import ConsolidationSpec
 from ..core import (BoxStats, lognormal_predictions_batch, lower_bound,
                     uniform_predictions_batch)
 from ..core.jaxsim import MAX_BINS_CAP, POLICIES, known_policy
@@ -134,6 +135,7 @@ class SweepSpec:
     seeds: Tuple[int, ...] = (0,)        # used by noisy prediction models
     max_bins: int = 64                   # initial slot pool per lane
     max_bins_cap: int = 8192             # escalation ladder ceiling
+    consolidations: Tuple[ConsolidationSpec, ...] = (ConsolidationSpec(),)
 
     def __post_init__(self):
         for p in self.policies:
@@ -141,7 +143,16 @@ class SweepSpec:
         assert self.max_bins_cap <= MAX_BINS_CAP
 
     def canonical(self) -> Dict:
-        return dataclasses.asdict(self)
+        blob = dataclasses.asdict(self)
+        # the consolidation axis enters the hash only when ON: a spec with
+        # every consolidation disabled hashes exactly as before the axis
+        # existed, so old stores stay addressable
+        cons = [c.canonical() for c in self.consolidations if c.enabled]
+        if cons:
+            blob["consolidations"] = cons
+        else:
+            blob.pop("consolidations")
+        return blob
 
     def spec_hash(self) -> str:
         blob = json.dumps(self.canonical(), sort_keys=True)
@@ -159,25 +170,36 @@ class SweepSpec:
 
 
 def result_key(suite: SuiteSpec, instance_name: str, policy: str,
-               pred: PredModel, seed: int) -> str:
-    return (f"{suite.label()}/{instance_name}/{policy}/"
-            f"{pred.label()}/seed{seed}")
+               pred: PredModel, seed: int,
+               cons: Optional[ConsolidationSpec] = None) -> str:
+    key = (f"{suite.label()}/{instance_name}/{policy}/"
+           f"{pred.label()}/seed{seed}")
+    if cons is not None and cons.enabled:
+        key += f"/{cons.canonical()}"
+    return key
 
 
 def _group_cached(records: Dict[str, Dict], suite: SuiteSpec, policy: str,
-                  pred: PredModel, seeds: Sequence[int]) -> bool:
+                  pred: PredModel, seeds: Sequence[int],
+                  cons: ConsolidationSpec = ConsolidationSpec()) -> bool:
     """True when every (instance, seed) record of the group is present -
     checked from record fields so cached suites need not be rebuilt.
     Suites with an uncounted size (n_instances == 0: uncapped trace
     suites) can never be proven complete without building, so they always
-    recompute."""
+    recompute.  Records predating the consolidation axis carry no
+    ``consolidate`` field and count as ``"none"``."""
     expected = suite.n_instances * len(seeds)
     if expected <= 0:
         return False
     have = sum(1 for r in records.values()
                if r["suite"] == suite.label() and r["policy"] == policy
-               and r["pred"] == pred.label() and r["seed"] in seeds)
+               and r["pred"] == pred.label() and r["seed"] in seeds
+               and r.get("consolidate", "none") == cons.canonical())
     return have >= expected
+
+
+def _cell_label(policy: str, cons: ConsolidationSpec) -> str:
+    return f"{policy}+{cons.canonical()}" if cons.enabled else policy
 
 
 # Built suites are deterministic functions of their (hashed) spec, so the
@@ -240,6 +262,10 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
     record schema (also persisted by SweepStore, see sweep/README.md):
       usage_time, lower_bound, ratio, n_bins_opened, overflowed, max_bins,
       suite, instance, policy, pred, seed
+    Consolidating cells (``spec.consolidations`` entries with
+    ``enabled``) additionally carry ``consolidate`` (the canonical spec
+    string), ``migrations`` and ``migration_cost``; disabled cells keep
+    the legacy schema byte-for-byte.
     """
     say = progress or (lambda *_: None)
     from ..resilience import faults
@@ -261,12 +287,16 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
         insts = lbs = batch = None   # built lazily: cached suites stay free
         for pred in spec.predictions:
             seeds = tuple(spec.seeds) if pred.noisy else (spec.seeds[0],)
-            todo = [p for p in spec.policies
+            cells = [(p, cons) for p in spec.policies
+                     for cons in spec.consolidations]
+            todo = [(p, cons) for p, cons in cells
                     if trace_level
-                    or not _group_cached(records, suite, p, pred, seeds)]
-            for p in spec.policies:
-                if p not in todo:
-                    say(f"skip {suite.label()}/{p}/{pred.label()} (cached)")
+                    or not _group_cached(records, suite, p, pred, seeds,
+                                         cons)]
+            for p, cons in cells:
+                if (p, cons) not in todo:
+                    say(f"skip {suite.label()}/{_cell_label(p, cons)}/"
+                        f"{pred.label()} (cached)")
                     obs.counter_add("experiment.cache_hit")
             if not todo:
                 continue
@@ -276,31 +306,31 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
                           pred=pred.label()):
                 pdeps = pad_predictions(
                     batch, [pred.durations(i, seeds) for i in insts])
-            for policy in todo:
-                say(f"run  {suite.label()}/{policy}/{pred.label()} "
-                    f"B={batch.B} S={len(seeds)}")
+            for policy, cons in todo:
+                say(f"run  {suite.label()}/{_cell_label(policy, cons)}/"
+                    f"{pred.label()} B={batch.B} S={len(seeds)}")
                 obs.counter_add("experiment.cache_miss")
                 faults.fire("sweep.group")
                 ckpt_key = "-".join(
-                    (spec.suites_hash(), suite.label(), policy,
-                     pred.label()))
+                    (spec.suites_hash(), suite.label(),
+                     _cell_label(policy, cons), pred.label()))
                 res = run_batch(batch, policy, pdeps, spec.max_bins,
                                 spec.max_bins_cap, backend=backend,
                                 shard=shard, block_events=block_events,
                                 trace_level=trace_level,
-                                checkpoint=ckpt, checkpoint_key=ckpt_key)
+                                checkpoint=ckpt, checkpoint_key=ckpt_key,
+                                consolidate=cons if cons.enabled else None)
                 if traces is not None and res.trace is not None:
                     S = len(seeds)
                     for bi, inst in enumerate(insts):
                         for si, seed in enumerate(seeds):
                             traces[result_key(suite, inst.name, policy,
-                                              pred, seed)] = \
+                                              pred, seed, cons)] = \
                                 res.trace.lane(bi * S + si)
                 group_recs = {}
                 for bi, inst in enumerate(insts):
                     for si, seed in enumerate(seeds):
-                        group_recs[result_key(suite, inst.name, policy,
-                                              pred, seed)] = {
+                        rec = {
                             "suite": suite.label(),
                             "instance": inst.name,
                             "policy": policy,
@@ -314,6 +344,14 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
                             "overflowed": bool(res.overflowed[bi, si]),
                             "max_bins": int(res.max_bins[bi]),
                         }
+                        if cons.enabled:
+                            rec["consolidate"] = cons.canonical()
+                            rec["migrations"] = \
+                                int(res.migrations[bi, si])
+                            rec["migration_cost"] = \
+                                float(res.migration_cost[bi, si])
+                        group_recs[result_key(suite, inst.name, policy,
+                                              pred, seed, cons)] = rec
                 records.update(group_recs)
                 if store is not None:
                     with obs.span("store.save", spec=spec.suites_hash()):
@@ -326,9 +364,14 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
 
 def summarize_sweep(records: Dict[str, Dict]) -> Dict[Tuple[str, str],
                                                       BoxStats]:
-    """(policy, pred label) -> BoxStats over per-(instance, seed) ratios."""
+    """(policy, pred label) -> BoxStats over per-(instance, seed) ratios.
+    Consolidating records summarize under ``policy+consspec`` so the
+    consolidated and plain variants of a policy stay separate rows."""
     groups: Dict[Tuple[str, str], List[float]] = {}
     for rec in records.values():
-        groups.setdefault((rec["policy"], rec["pred"]), []).append(
-            rec["ratio"])
+        pol = rec["policy"]
+        cons = rec.get("consolidate", "none")
+        if cons != "none":
+            pol = f"{pol}+{cons}"
+        groups.setdefault((pol, rec["pred"]), []).append(rec["ratio"])
     return {k: BoxStats.from_ratios(v) for k, v in sorted(groups.items())}

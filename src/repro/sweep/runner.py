@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
+from ..consolidate import ConsolidationSpec, consolidated_replay
 from ..core.jaxsim import (MAX_BINS_CAP, _replay_batch, grow_max_bins,
                            known_policy, resolve_backend)
 from ..obs.trace import ReplayTrace, from_scan
@@ -233,6 +234,26 @@ def _run_checkpointed(arrays, *, policy: str, max_bins: int, backend: str,
             np.asarray(ov).reshape(B, S), None)
 
 
+def _run_consolidated(arrays, *, policy: str, max_bins: int, backend: str,
+                      block_events: int, spec: ConsolidationSpec):
+    """One batched run through the consolidating chunked driver
+    (``consolidate.consolidated_replay``; single device, no traces - the
+    planner needs the carry on the host between chunks anyway).  Returns
+    the ``_run_arrays`` triple plus the per-cell churn arrays."""
+    faults.fire("sweep.scan")
+    B, S, _ = arrays[4].shape
+    flat = _flatten_lanes(*arrays)
+    u, o, _placements, ov, stats = consolidated_replay(
+        *flat, policy=policy, max_bins=max_bins, backend=backend,
+        block_events=block_events, spec=spec)
+    churn = {"migrations":
+             np.asarray(stats["migrations"]).reshape(B, S),
+             "migration_cost":
+             np.asarray(stats["migration_cost"]).reshape(B, S)}
+    return (np.asarray(u).reshape(B, S), np.asarray(o).reshape(B, S),
+            np.asarray(ov).reshape(B, S), churn)
+
+
 @dataclasses.dataclass
 class BatchRunResult:
     usage_time: np.ndarray     # (B, S) float
@@ -240,6 +261,8 @@ class BatchRunResult:
     overflowed: np.ndarray     # (B, S) bool (True only if the cap was hit)
     max_bins: np.ndarray       # (B,) slot-pool size that produced each lane
     trace: Optional[ReplayTrace] = None  # trace_level >= 1 only
+    migrations: Optional[np.ndarray] = None      # (B, S), consolidate only
+    migration_cost: Optional[np.ndarray] = None  # (B, S), consolidate only
 
     @property
     def S(self) -> int:
@@ -253,7 +276,9 @@ def run_batch(batch: InstanceBatch, policy: str,
               shard: str = "auto", block_events: int = 0,
               trace_level: int = 0,
               checkpoint: Optional[ReplayCheckpointer] = None,
-              checkpoint_key: str = "") -> BatchRunResult:
+              checkpoint_key: str = "",
+              consolidate: Optional[ConsolidationSpec] = None
+              ) -> BatchRunResult:
     """Replay every lane of ``batch`` under ``policy`` (any
     ``jaxsim.SCAN_POLICIES`` name, category-structured policies included).
 
@@ -283,6 +308,15 @@ def run_batch(batch: InstanceBatch, policy: str,
     (``_dispatch``): transient device failures retry, persistent ones
     degrade blocked -> per-event -> jnp / sharded -> single-device with
     identical results.
+
+    ``consolidate`` (an enabled ``ConsolidationSpec``) routes the replay
+    through the chunked consolidating driver: scan chunks alternate with
+    host planning and MIGRATE chunks (``consolidate.consolidated_replay``)
+    and the result gains per-cell ``migrations`` / ``migration_cost``
+    arrays.  The consolidating path is single-device and untraced and
+    bypasses checkpointing; ``None`` (or a disabled spec is rejected by
+    the driver) runs exactly the paths above, bit-identically to a build
+    without the consolidation axis.
     """
     assert known_policy(policy), f"{policy!r} is not a scan policy"
     assert shard in ("auto", "never", "always"), shard
@@ -299,6 +333,12 @@ def run_batch(batch: InstanceBatch, policy: str,
     opened = np.zeros((B, S), np.int64)
     over = np.ones((B, S), bool)
     mb_used = np.full(B, max_bins, np.int64)
+    migrations = migration_cost = None
+    if consolidate is not None:
+        assert consolidate.enabled, \
+            "pass consolidate=None for non-consolidating runs"
+        migrations = np.zeros((B, S), np.int64)
+        migration_cost = np.zeros((B, S))
     lanes = np.arange(B)
     mb = max_bins
     arrays = (batch.sizes, batch.times, batch.kinds, batch.items, pdeps,
@@ -316,7 +356,14 @@ def run_batch(batch: InstanceBatch, policy: str,
             with obs.span("sweep.scan", policy=policy, max_bins=mb,
                           lanes=int(lanes.size) * S) as sc, \
                     obs.jax_profile():
-                if checkpoint is not None and not trace_level:
+                if consolidate is not None:
+                    u, o, ov, churn = _run_consolidated(
+                        sub, policy=policy, max_bins=mb, backend=backend,
+                        block_events=block_events, spec=consolidate)
+                    tr = None
+                    migrations[lanes] = churn["migrations"]
+                    migration_cost[lanes] = churn["migration_cost"]
+                elif checkpoint is not None and not trace_level:
                     u, o, ov, tr = _run_checkpointed(
                         sub, policy=policy, max_bins=mb, backend=backend,
                         block_events=block_events, ckpt=checkpoint,
@@ -358,7 +405,9 @@ def run_batch(batch: InstanceBatch, policy: str,
     trace = None if trace_np is None else from_scan(
         trace_np, batch.times, batch.kinds, batch.items, policy=policy,
         S=S)
-    return BatchRunResult(usage, opened, over, mb_used, trace)
+    return BatchRunResult(usage, opened, over, mb_used, trace,
+                          migrations=migrations,
+                          migration_cost=migration_cost)
 
 
 def run_grid(batch: InstanceBatch, policies: Sequence[str],

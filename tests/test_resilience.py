@@ -245,6 +245,71 @@ def test_interrupt_resume_bit_identical(small_batch, tmp_path):
     assert np.array_equal(res.n_bins_opened, base.n_bins_opened)
 
 
+def _migrate_stream(n=24, every=8):
+    """A flattened single-lane event stream with MIGRATE events spliced
+    across checkpoint-segment boundaries: each picks an item alive at its
+    splice point, at the clock of the preceding event."""
+    from repro.kernels.fitscore import (ARRIVAL_KIND, DEPARTURE_KIND,
+                                        MIGRATE_KIND)
+    from repro.sweep.runner import _flatten_lanes, instances_pdeps
+    batch = pack_instances([quantized_instance(7, n=n)])
+    arrays = (batch.sizes, batch.times, batch.kinds, batch.items,
+              instances_pdeps(batch), batch.dmask, batch.arrivals,
+              batch.pdeps, batch.n_items)
+    sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps, n_items = \
+        [np.asarray(a) for a in _flatten_lanes(*arrays)]
+    alive, live_at = set(), []      # live_at[i] = items alive before event i
+    for i in range(2 * n):
+        live_at.append(frozenset(alive))
+        if kinds[0, i] == ARRIVAL_KIND:
+            alive.add(int(items[0, i]))
+        elif kinds[0, i] == DEPARTURE_KIND:
+            alive.discard(int(items[0, i]))
+    cands = [i for i in range(1, 2 * n) if live_at[i]]
+    assert len(cands) >= 3, "instance too sparse for a migrate stream"
+    picks = sorted({cands[len(cands) // 4], cands[len(cands) // 2],
+                    cands[3 * len(cands) // 4]}, reverse=True)
+    for k in picks:                 # descending: earlier indices stay valid
+        mig = min(live_at[k])
+        times = np.insert(times, k, times[0, k - 1], axis=1)
+        kinds = np.insert(kinds, k, MIGRATE_KIND, axis=1)
+        items = np.insert(items, k, mig, axis=1)
+    return (sizes, times, kinds, items, pdeps, dmask, arrivals, rdeps,
+            n_items)
+
+
+@pytest.mark.parametrize("policy", ("first_fit", "rcp"))
+def test_checkpointed_migrate_stream_bit_identical(tmp_path, policy):
+    """Segmented replay of a MIGRATE-bearing stream == the unsegmented
+    scan with the MIGRATE branch compiled in - snapshots taken between
+    migrations resume the exact consolidation state."""
+    from repro.core.jaxsim import _replay_batch
+    arrays = _migrate_stream()
+    ref = _replay_batch(*arrays, policy=policy, max_bins=32, backend="jnp",
+                        migrate=True)
+    ckpt = ReplayCheckpointer(str(tmp_path), every_events=8)
+    out = checkpoint.checkpointed_replay(
+        arrays, policy=policy, max_bins=32, backend="jnp", block_events=0,
+        ckpt=ckpt, key=f"mig-{policy}", migrate=True)
+    assert np.array_equal(np.asarray(out[0]), np.asarray(ref[0]))   # usage
+    assert np.array_equal(np.asarray(out[1]), np.asarray(ref[1]))   # bins
+    assert np.array_equal(np.asarray(out[2]), np.asarray(ref[2]))   # place
+    # kill mid-stream, rerun: resumes from the snapshot, bit-identical
+    ckpt2 = ReplayCheckpointer(str(tmp_path / "killed"), every_events=8)
+    with faults.injected("ckpt.segment:error:3"):
+        with pytest.raises(faults.InjectedFault):
+            checkpoint.checkpointed_replay(
+                arrays, policy=policy, max_bins=32, backend="jnp",
+                block_events=0, ckpt=ckpt2, key="kill", migrate=True)
+    c0 = obs.counter_get("resilience.ckpt_resume")
+    out2 = checkpoint.checkpointed_replay(
+        arrays, policy=policy, max_bins=32, backend="jnp", block_events=0,
+        ckpt=ckpt2, key="kill", migrate=True)
+    assert obs.counter_get("resilience.ckpt_resume") == c0 + 1
+    assert np.array_equal(np.asarray(out2[0]), np.asarray(ref[0]))
+    assert np.array_equal(np.asarray(out2[2]), np.asarray(ref[2]))
+
+
 # -------------------------------------------- chaos matrix: kill + resume
 
 def _sweep_cmd(store):
@@ -431,6 +496,30 @@ def test_admission_queue_keeps_draining_under_kernel_failure():
         placed = q.drain(1.0)
     assert len(placed) == 8       # degraded placement, nothing shed
     assert q.stats.shed == 0
+
+
+def test_admission_queue_drains_in_deadline_order():
+    """take() pops by earliest expiry (submission order breaking ties) -
+    a request about to lapse goes before one with slack; expired entries
+    shed mid-drain; uniform deadlines degenerate to exact FIFO."""
+    q = AdmissionQueue(None, max_pending=16, deadline=5.0, batch_max=16)
+    reqs = [Request(i, 0.0, 64, 100) for i in range(6)]
+    q.submit(reqs[0], 0.0, deadline=10.0)
+    q.submit(reqs[1], 0.0, deadline=3.0)
+    q.submit(reqs[2], 0.0, deadline=1.0)
+    q.submit(reqs[3], 0.0)                  # queue default: 5.0
+    q.submit(reqs[4], 0.0, deadline=3.0)    # ties with rid 1: rid 1 first
+    q.submit(reqs[5], 0.0, deadline=0.2)    # already lapsed by drain time
+    dl0 = obs.counter_get("resilience.shed_deadline")
+    out = [r.rid for r, _ in q.take(0.5)]
+    assert out == [2, 1, 4, 3, 0]
+    assert obs.counter_get("resilience.shed_deadline") == dl0 + 1
+    assert q.stats.shed_deadline == 1 and len(q) == 0
+    # uniform deadline == the legacy insertion-order drain, exactly
+    q2 = AdmissionQueue(None, max_pending=16, deadline=5.0, batch_max=16)
+    for r in reqs:
+        q2.submit(r, 0.0)
+    assert [r.rid for r, _ in q2.take(0.1)] == [0, 1, 2, 3, 4, 5]
 
 
 # ------------------------------------------------- validation / quarantine
