@@ -9,9 +9,14 @@
 # --fast: smoke mode (small suites, a figure subset, a small sweep grid) -
 #   used by tests/test_benchmarks_smoke.py to keep the benches runnable.
 # --json PATH: also emit every row as machine-readable JSON
-#   [{"name", "us_per_call", "derived"}, ...] plus the run's obs counter
-#   snapshot, so the perf trajectory can be tracked across PRs (see
-#   BENCH_sweep.json at the repo root).  A JSONL obs run log (spans +
+#   [{"name", "us_per_call", "derived", "median_us", "stdev_us", "reps"},
+#   ...] plus the run's obs counter snapshot, so the perf trajectory can
+#   be tracked across PRs (see BENCH_sweep.json at the repo root).  Every
+#   row carries the full timing block: obs.timeit rows parse it from
+#   their spread comment, one-shot wall-clock rows normalize to
+#   median_us=us_per_call / stdev_us=0 / reps=1.  Rows timed through
+#   Pallas interpret-mode emulation on CPU additionally carry
+#   "mode": "interpret" - exclude them from speedup-style comparisons.  A JSONL obs run log (spans +
 #   counters, ``repro.obs.export_jsonl``) is written next to it as
 #   PATH-with-.obs.jsonl - the per-SHA CI artifact; inspect with
 #   ``python -m repro obs``.
@@ -46,6 +51,13 @@ def _parse_row(line: str):
     if m:   # obs.timeit rows carry their spread as a structured comment
         row.update(median_us=float(m.group("med")),
                    stdev_us=float(m.group("sd")), reps=int(m.group("n")))
+    else:   # one-shot wall-clock rows: normalize to the same schema
+        row.update(median_us=row["us_per_call"], stdev_us=0.0, reps=1)
+    if "mode=interpret" in comment:
+        # Pallas rows emulated on CPU: tagged so CI tooling excludes them
+        # from speedup-style comparisons (the timing measures the
+        # interpreter, not the kernel)
+        row["mode"] = "interpret"
     return row
 
 
@@ -102,6 +114,7 @@ def main(argv=None) -> None:
                   perf.replay_carry, perf.fitscore_step, perf.replay_block,
                   perf.replay_block_bytes, perf.sweep_sharded,
                   perf.serve_throughput, perf.serve_retrace,
+                  perf.stream_replay,
                   perf.roofline_summary]
         if args.fast:
             # sweep_batched_only re-times the full-size headline row
@@ -139,7 +152,11 @@ def main(argv=None) -> None:
                       # CI gates throughput scaling, latency and the
                       # serve retrace invariant per push
                       lambda: perf.serve_throughput(n=480),
-                      perf.serve_retrace]
+                      perf.serve_retrace,
+                      # the streamed-replay smoke row: bit-equality +
+                      # bounded-memory gates run before the number is
+                      # emitted, and the row rides the per-SHA artifact
+                      perf.stream_replay_fast]
         for group in groups:
             try:
                 for line in group():

@@ -365,7 +365,40 @@ def workload(kind: str = "azure", **kw) -> Workload:
                    "azure_trace / instances / serving_requests")
 
 
+def stream_source(wl: Union[Workload, Instance], instance: Union[int, str] = 0,
+                  setting: "Setting | str" = "clairvoyant", seed: int = 0):
+    """One instance of a workload as a bounded-memory request source for
+    ``repro.stream.replay_stream`` - the API-level on-ramp to streamed
+    full-trace replay.
+
+    ``instance`` selects by build index or instance name; ``setting``
+    resolves predicted departures exactly as ``Experiment`` would
+    (clairvoyant -> real departures, predicted -> the workload's model at
+    ``seed``).  Note the source wraps a *built* instance: for traces too
+    large to materialize at all, construct ``repro.stream.CsvSource``
+    directly on the raw CSV instead."""
+    from ..stream import InstanceSource
+    if isinstance(wl, Instance):
+        return InstanceSource(wl)
+    insts = wl.suite().build()
+    if isinstance(instance, str):
+        picked = [i for i in insts if i.name == instance]
+        assert picked, f"no instance {instance!r} in {wl.label()}: " \
+                       f"{[i.name for i in insts]}"
+        inst = picked[0]
+    else:
+        inst = insts[int(instance)]
+    model = wl.pred_model(Setting.parse(setting))
+    pdur = None if model is None else model.durations(inst, (seed,))
+    if pdur is None:                # exact settings: real departures
+        return InstanceSource(inst)
+    pdur = np.asarray(pdur)
+    if pdur.ndim == 2:              # (n_seeds, n_items) noisy models
+        pdur = pdur[0]
+    return InstanceSource(inst, predicted_durations=pdur)
+
+
 __all__ = ["Setting", "Workload", "SuiteWorkload", "RuntimeWorkload",
            "synthetic", "azure_trace", "instances", "serving_requests",
-           "requests_to_instance", "workload", "ZeroPredictions",
-           "AttachedPredictions"]
+           "requests_to_instance", "stream_source", "workload",
+           "ZeroPredictions", "AttachedPredictions"]

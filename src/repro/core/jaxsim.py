@@ -367,6 +367,50 @@ def _dense_key_ids(i, cls, win):
         first[grp].astype(jnp.int32))
 
 
+def _category_state0(spec, L, item_rows, d, Np):
+    """Initial carried category state for one policy family - shape-only
+    (the placement-dependent state starts empty), so a streamed replay can
+    build the same carry without the instance arrays.  ``item_rows`` is the
+    item-table length: ``n_max`` for in-memory replays, the recycled pool
+    size for streamed ones (``repro.stream``)."""
+    f32, i32 = jnp.float32, jnp.int32
+    tag0 = jnp.full((L, Np), TAG_VIRGIN, i32)
+    if spec.family in ("score", "la"):
+        return {}
+    if spec.family in ("cbd", "cbdt"):
+        return {"tag": tag0}
+    if spec.family == "hybrid":
+        return {"tag": tag0, "agg": jnp.zeros((L, item_rows, d), f32),
+                "ingen": jnp.zeros((L, item_rows), bool)}
+    if spec.family == "rcp":
+        return {"tag": tag0,
+                "agg_gen": jnp.zeros((L, KCAT, d), f32),
+                "agg_cat": jnp.zeros((L, KCAT, d), f32),
+                "agg_bcat": jnp.zeros((L, KCAT, d), f32),
+                "agg_base": jnp.zeros((L, d), f32),
+                "on": jnp.zeros((L, KCAT), bool),
+                "base": jnp.full((L,), -1, i32),
+                "alpha": jnp.ones((L,), f32),
+                "loc": jnp.zeros((L, item_rows), i32)}
+    assert spec.family == "adaptive", spec.family
+    return {"err": jnp.ones((L,), f32)}
+
+
+def _core_state0(L, Np, dpad, item_rows):
+    """The fresh core scan carry (loads, counts, alive, open/access seq,
+    closes, open_time, placements, usage, seq, opened, overflow) - exactly
+    what ``_replay_batch`` starts from when ``carry0`` is None."""
+    i32 = jnp.int32
+    return (jnp.zeros((L, Np, dpad)), jnp.zeros((L, Np), i32),
+            jnp.zeros((L, Np), bool),
+            jnp.zeros((L, Np), i32),
+            jnp.full((L, Np), -1, i32),
+            jnp.full((L, Np), NEG), jnp.zeros((L, Np)),
+            jnp.full((L, item_rows), -1, i32), jnp.zeros(L),
+            jnp.zeros(L, i32), jnp.zeros(L, i32),
+            jnp.zeros(L, bool))
+
+
 def _category_setup(spec, sizes, pdeps, dmask, arrivals, rdeps, n_items,
                     times, kinds, items, Np):
     """Per-item category constants, initial carried category state, and
@@ -378,19 +422,17 @@ def _category_setup(spec, sizes, pdeps, dmask, arrivals, rdeps, n_items,
     state (slot tags, aggregates, ON flags, alpha / err scalars)."""
     L, n_max, d = sizes.shape
     f32, i32 = jnp.float32, jnp.int32
+    cat0 = _category_state0(spec, L, n_max, d, Np)
     if spec.family == "score":
-        return {}, {}, ()
+        return {}, cat0, ()
     assert arrivals is not None and rdeps is not None and n_items is not None, \
         f"{spec.family} lanes need arrivals/rdeps/n_items"
     pdur = pdeps - arrivals
-    tag0 = jnp.full((L, Np), TAG_VIRGIN, i32)
 
     if spec.family == "cbd":
-        return ({"cat": duration_class_jnp(pdur, spec.beta)},
-                {"tag": tag0}, ())
+        return ({"cat": duration_class_jnp(pdur, spec.beta)}, cat0, ())
     if spec.family == "cbdt":
-        return ({"cat": departure_window_jnp(pdeps, spec.rho)},
-                {"tag": tag0}, ())
+        return ({"cat": departure_window_jnp(pdeps, spec.rho)}, cat0, ())
 
     if spec.family == "hybrid":
         rdur = rdeps - arrivals
@@ -409,9 +451,7 @@ def _category_setup(spec, sizes, pdeps, dmask, arrivals, rdeps, n_items,
         # the first item index carrying it, so aggregates index a fixed
         # (n_max,)-sized table without host round-trips
         key = jax.vmap(_dense_key_ids)(i, cls, win)
-        return ({"key": key, "thr": thr, "cls": cls},
-                {"tag": tag0, "agg": jnp.zeros((L, n_max, d), f32),
-                 "ingen": jnp.zeros((L, n_max), bool)}, ())
+        return {"key": key, "thr": thr, "cls": cls}, cat0, ()
 
     if spec.family == "rcp":
         rdur = rdeps - arrivals
@@ -432,26 +472,17 @@ def _category_setup(spec, sizes, pdeps, dmask, arrivals, rdeps, n_items,
         newflag = is_arr & (eidx[None, :] ==
                             jnp.take_along_axis(first, ev_cat, axis=1))
         xcount = jnp.cumsum(newflag.astype(i32), axis=1)
-        return ({"cat": cat, "large": large, "p2err": p2err},
-                {"tag": tag0,
-                 "agg_gen": jnp.zeros((L, KCAT, d), f32),
-                 "agg_cat": jnp.zeros((L, KCAT, d), f32),
-                 "agg_bcat": jnp.zeros((L, KCAT, d), f32),
-                 "agg_base": jnp.zeros((L, d), f32),
-                 "on": jnp.zeros((L, KCAT), bool),
-                 "base": jnp.full((L,), -1, i32),
-                 "alpha": jnp.ones((L,), f32),
-                 "loc": jnp.zeros((L, n_max), i32)},
+        return ({"cat": cat, "large": large, "p2err": p2err}, cat0,
                 (xcount,))
 
     if spec.family == "la":
         return ({"cat": la_class_jnp(jnp.maximum(pdur, 0.0), spec.la_mode)},
-                {}, ())
+                cat0, ())
 
     assert spec.family == "adaptive", spec.family
     rdur = rdeps - arrivals
-    return ({"errmax": prediction_error_jnp(rdur, pdur).astype(f32)},
-            {"err": jnp.ones((L,), f32)}, ())
+    return ({"errmax": prediction_error_jnp(rdur, pdur).astype(f32)}, cat0,
+            ())
 
 
 def replay_event_extras(policy, sizes, pdeps, dmask, arrivals, rdeps,
@@ -558,48 +589,22 @@ def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
     elif fam == "adaptive":
         ev_f["errmax"] = padded(g_ev(consts["errmax"]).astype(f32), 0.0)
 
-    def blocks(a):
-        return jnp.swapaxes(a.reshape((L, NB, T) + a.shape[2:]), 0, 1)
-
-    xs = (jax.tree.map(blocks, ev_i), jax.tree.map(blocks, ev_f),
-          blocks(ev_size))
+    xs_streams = (ev_i, ev_f, ev_size)
 
     if carry0 is not None:
         # resume a segmented replay: the packed carry IS the replay state
         carry = jax.tree.map(jnp.asarray, carry0)
     else:
-        carry = {
-            "loads": jnp.zeros((L, Np, dpad), f32),
-            "slotf": jnp.zeros((L, Np, _fk.SLOTF_COLS), f32)
-            .at[:, :, _fk.SLOTF_CLOSES].set(NEG),
-            "sloti": jnp.zeros((L, Np, _fk.SLOTI_COLS), i32)
-            .at[:, :, _fk.SLOTI_TAG].set(TAG_VIRGIN),
-            "itemi": jnp.zeros((L, n_max, _fk.ITEMI_COLS), i32)
-            .at[:, :, _fk.ITEMI_PLACE].set(-1),
-            "sf": jnp.zeros((L, _fk.SF_COLS), f32)
-            .at[:, _fk.SF_ALPHA].set(1.0).at[:, _fk.SF_ERR].set(1.0),
-            "si": jnp.zeros((L, _fk.SI_COLS), i32)
-            .at[:, _fk.SI_BASE].set(-1),
-        }
-        if fam == "hybrid":
-            carry["hagg"] = jnp.zeros((L, n_max, dpad), f32)
-        elif fam == "rcp":
-            carry["ragg"] = jnp.zeros((L, _fk.RAGG_ROWS, dpad), f32)
-            carry["ron"] = jnp.zeros((L, KCAT, _fk.RON_COLS), i32)
+        carry = packed_init_carry(fam, L, n_max, max_bins, d)
 
-    def step(c, ev):
-        evi_b, evf_b, size_b = ev
-        c = fitscore_replay_block(
-            c, evi_b, evf_b, size_b, dmask_p, family=fam,
-            policy=policy if fam == "score" else "first_fit",
-            n=max_bins, d=d, large_bins=spec.large_bins,
-            adaptive_alpha=spec.adaptive_alpha,
-            direct_sum=spec.direct_sum, la_mode=spec.la_mode,
-            la_split=LA_BINARY_SPLIT, low=spec.low, high=spec.high,
-            migrate=migrate, interpret=(backend == "pallas_interpret"))
-        return c, None
-
-    carry, _ = jax.lax.scan(step, carry, xs)
+    carry = _fk.fitscore_replay_chunk(
+        carry, *xs_streams, dmask_p, block_events=T, family=fam,
+        policy=policy if fam == "score" else "first_fit",
+        n=max_bins, d=d, large_bins=spec.large_bins,
+        adaptive_alpha=spec.adaptive_alpha,
+        direct_sum=spec.direct_sum, la_mode=spec.la_mode,
+        la_split=LA_BINARY_SPLIT, low=spec.low, high=spec.high,
+        migrate=migrate, interpret=(backend == "pallas_interpret"))
     out = (carry["sf"][:, _fk.SF_USAGE],
            carry["si"][:, _fk.SI_OPENED],
            carry["itemi"][:, :, _fk.ITEMI_PLACE],
@@ -607,6 +612,55 @@ def _replay_batch_blocked(sizes, times, kinds, items, pdeps, dmask,
     # usage/opened/placements live in carry columns (cumulative), so the
     # final segment of a checkpointed replay returns full-run totals
     return out + (carry,) if return_carry else out
+
+
+def packed_init_carry(fam: str, L: int, item_rows: int, max_bins: int,
+                      d: int):
+    """A fresh packed (VMEM-layout) replay carry for the event-blocked
+    megakernel path: slot closes at ``SCORE_NEG`` (virgin), tags
+    ``TAG_VIRGIN``, placements -1, PPE alpha / adaptive err at 1.0, RCP
+    base slot -1.  ``item_rows`` is the ``itemi`` (and hybrid ``hagg``)
+    row count - ``n_max`` in-memory, the recycled pool size when streamed."""
+    f32, i32 = jnp.float32, jnp.int32
+    Np, dpad, _, _ = select_pad_geometry(max_bins, d)
+    carry = {
+        "loads": jnp.zeros((L, Np, dpad), f32),
+        "slotf": jnp.zeros((L, Np, _fk.SLOTF_COLS), f32)
+        .at[:, :, _fk.SLOTF_CLOSES].set(NEG),
+        "sloti": jnp.zeros((L, Np, _fk.SLOTI_COLS), i32)
+        .at[:, :, _fk.SLOTI_TAG].set(TAG_VIRGIN),
+        "itemi": jnp.zeros((L, item_rows, _fk.ITEMI_COLS), i32)
+        .at[:, :, _fk.ITEMI_PLACE].set(-1),
+        "sf": jnp.zeros((L, _fk.SF_COLS), f32)
+        .at[:, _fk.SF_ALPHA].set(1.0).at[:, _fk.SF_ERR].set(1.0),
+        "si": jnp.zeros((L, _fk.SI_COLS), i32)
+        .at[:, _fk.SI_BASE].set(-1),
+    }
+    if fam == "hybrid":
+        carry["hagg"] = jnp.zeros((L, item_rows, dpad), f32)
+    elif fam == "rcp":
+        carry["ragg"] = jnp.zeros((L, _fk.RAGG_ROWS, dpad), f32)
+        carry["ron"] = jnp.zeros((L, KCAT, _fk.RON_COLS), i32)
+    return carry
+
+
+def replay_init_carry(policy: str, max_bins: int, d: int, item_rows: int,
+                      *, L: int = 1, backend: str = "jnp",
+                      block_events: int = 0):
+    """The fresh carry ``_replay_batch`` starts from, in the layout the
+    (backend, block_events) config threads across chunk boundaries - what
+    a streamed replay (``repro.stream``) initializes once and then passes
+    back in as ``carry0`` chunk after chunk."""
+    spec = policy_spec(policy)
+    if backend != "jnp" and block_events and block_events > 1:
+        return packed_init_carry(_KERNEL_FAMILY[spec.family], L, item_rows,
+                                 max_bins, d)
+    if backend != "jnp":
+        Np, dpad, _, _ = select_pad_geometry(max_bins, d)
+    else:
+        Np, dpad = max_bins, d
+    return (_core_state0(L, Np, dpad, item_rows),
+            _category_state0(spec, L, item_rows, d, Np))
 
 
 def make_live_carry(policy: str, max_bins: int, d: int,
@@ -627,25 +681,7 @@ def make_live_carry(policy: str, max_bins: int, d: int,
     assert fam != "hybrid", \
         f"{policy!r} is clairvoyant-only (whole-instance key table); " \
         "no live serving carry"
-    f32, i32 = jnp.float32, jnp.int32
-    Np, dpad, _, _ = select_pad_geometry(max_bins, d)
-    carry = {
-        "loads": jnp.zeros((1, Np, dpad), f32),
-        "slotf": jnp.zeros((1, Np, _fk.SLOTF_COLS), f32)
-        .at[:, :, _fk.SLOTF_CLOSES].set(NEG),
-        "sloti": jnp.zeros((1, Np, _fk.SLOTI_COLS), i32)
-        .at[:, :, _fk.SLOTI_TAG].set(TAG_VIRGIN),
-        "itemi": jnp.zeros((1, max_items, _fk.ITEMI_COLS), i32)
-        .at[:, :, _fk.ITEMI_PLACE].set(-1),
-        "sf": jnp.zeros((1, _fk.SF_COLS), f32)
-        .at[:, _fk.SF_ALPHA].set(1.0).at[:, _fk.SF_ERR].set(1.0),
-        "si": jnp.zeros((1, _fk.SI_COLS), i32)
-        .at[:, _fk.SI_BASE].set(-1),
-    }
-    if fam == "rcp":
-        carry["ragg"] = jnp.zeros((1, _fk.RAGG_ROWS, dpad), f32)
-        carry["ron"] = jnp.zeros((1, KCAT, _fk.RON_COLS), i32)
-    return carry
+    return packed_init_carry(fam, 1, max_items, max_bins, d)
 
 
 def grow_live_carry(carry, max_bins: int, d: int):
@@ -1075,14 +1111,7 @@ def _replay_batch(sizes, times, kinds, items, pdeps, dmask, arrivals=None,
             ys["alive"] = core_n[2]
         return carry, ys
 
-    core0 = (jnp.zeros((L, Np, dpad)), jnp.zeros((L, Np), i32),
-             jnp.zeros((L, Np), bool),
-             jnp.zeros((L, Np), i32),
-             jnp.full((L, Np), -1, i32),
-             jnp.full((L, Np), NEG), jnp.zeros((L, Np)),
-             jnp.full((L, n_max), -1, i32), jnp.zeros(L),
-             jnp.zeros(L, i32), jnp.zeros(L, i32),
-             jnp.zeros(L, bool))
+    core0 = _core_state0(L, Np, dpad, n_max)
     xs = tuple(jnp.swapaxes(a, 0, 1)
                for a in (times, kinds, items) + xs_extra)
     init = (core0, cat0) if carry0 is None else \

@@ -934,6 +934,42 @@ def fitscore_replay_block(carry, ev_i, ev_f, ev_size, dmask, *, family: str,
     return dict(zip(names, outs))
 
 
+def fitscore_replay_chunk(carry, ev_i, ev_f, ev_size, dmask, *,
+                          block_events: int, **block_kwargs):
+    """Chunk-boundary replay entry: ``lax.scan`` of
+    :func:`fitscore_replay_block` over a fixed-geometry chunk of
+    ``C = NB * block_events`` events - the unit of device work for both the
+    event-blocked in-memory path (``core.jaxsim._replay_batch_blocked``)
+    and the streamed replay (``repro.stream``), which threads the returned
+    packed carry into the next chunk.
+
+    ``ev_i`` / ``ev_f`` are dicts of (L, C) event streams, ``ev_size`` the
+    (L, C, dpad) pre-gathered sizes; C must be a multiple of
+    ``block_events`` (pad the tail with ``PAD_KIND`` no-ops - the carry
+    passes through them, so padding never changes decisions).  Because the
+    carry after any block equals the carry the per-event scan would hold at
+    the same event index, a replay chunked at *any* block-aligned boundary
+    is bit-identical to the unchunked one (tests/test_stream.py)."""
+    T = int(block_events)
+    L, C, _ = ev_size.shape
+    assert T >= 1 and C % T == 0, (C, T)
+    NB = C // T
+
+    def blocks(a):
+        return jnp.swapaxes(a.reshape((L, NB, T) + a.shape[2:]), 0, 1)
+
+    xs = (jax.tree.map(blocks, ev_i), jax.tree.map(blocks, ev_f),
+          blocks(ev_size))
+
+    def step(c, ev):
+        evi_b, evf_b, size_b = ev
+        return fitscore_replay_block(c, evi_b, evf_b, size_b, dmask,
+                                     **block_kwargs), None
+
+    carry, _ = jax.lax.scan(step, carry, xs)
+    return carry
+
+
 def fitscore_select_batch(loads, counts, alive, open_seq, access_seq, closes,
                           size, pdep, now, dmask, cmask=None, *, policy: str,
                           bn: int = 256, interpret: bool = False):

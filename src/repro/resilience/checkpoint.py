@@ -266,3 +266,68 @@ def checkpointed_replay(arrays, *, policy: str, max_bins: int,
     if not ckpt.keep and os.path.exists(path):
         os.unlink(path)
     return out
+
+
+# --------------------------------------------------------- streamed replay
+
+@dataclasses.dataclass
+class StreamCheckpointer:
+    """Chunk-boundary snapshots for ``repro.stream.replay_stream``.
+
+    The streamed replay's complete state at a chunk boundary is (carry,
+    row pool, chunk index): the host-side chunk builder is deterministic,
+    so a resumed run rebuilds it by fast-forwarding the request stream to
+    the snapshot's chunk - no event arrays are ever persisted.  Snapshots
+    reuse the atomic/checksummed ``save_checkpoint`` format; the digest
+    key covers the source fingerprint and the full replay config (policy,
+    pool size, backend, block/chunk geometry), so a snapshot from a
+    different stream or geometry is stale, never trusted.
+
+    ``every_chunks`` is the snapshot cadence (each save fences the device
+    pipeline - the double-buffered overlap resumes on the next chunk);
+    ``keep=True`` leaves the last snapshot after a completed run."""
+
+    root: str
+    every_chunks: int = 8
+    resume: bool = True
+    keep: bool = False
+
+    def key(self, fingerprint: str, *, policy: str, max_bins: int,
+            backend: str, block_events: int, chunk_events: int) -> str:
+        h = hashlib.blake2b(digest_size=8)
+        h.update(f"{fingerprint}|{policy}|{max_bins}|{backend}"
+                 f"|{block_events}|{chunk_events}".encode())
+        return f"{policy}-{h.hexdigest()}"
+
+    def path_for(self, key: str) -> str:
+        safe = "".join(c if c.isalnum() or c in "._-" else "-"
+                       for c in key)
+        return os.path.join(self.root, f"stream_{safe}.npz")
+
+    def load(self, key: str):
+        """(carry, pool, chunks_done) from a matching snapshot, or None."""
+        if not self.resume:
+            return None
+        loaded = load_checkpoint(self.path_for(key), {"digest": key})
+        if loaded is None:
+            return None
+        state, meta = loaded
+        import jax.numpy as jnp
+        state = jax.tree.map(jnp.asarray, state)
+        obs.counter_add("resilience.stream_ckpt_resume")
+        obs.instant("resilience.stream_ckpt_resume", key=key,
+                    chunks=int(meta["chunks"]))
+        return state["carry"], state["pool"], int(meta["chunks"])
+
+    def maybe_save(self, key: str, carry, pool, chunks: int, *,
+                   final: bool) -> None:
+        path = self.path_for(key)
+        if final:
+            if not self.keep and os.path.exists(path):
+                os.unlink(path)
+            return
+        if chunks % max(int(self.every_chunks), 1):
+            return
+        state = jax.tree.map(np.asarray, {"carry": carry, "pool": pool})
+        save_checkpoint(path, state, {"digest": key, "chunks": int(chunks)})
+        obs.counter_add("resilience.stream_ckpt_save")

@@ -1,0 +1,31 @@
+"""Bounded-memory streamed replay: full-length traces in O(alive) memory.
+
+The in-memory sweep path materializes every instance as one padded
+``(L, 2 n_max)`` event tensor plus ``n_max`` item rows, so lane memory
+grows with trace length - a few thousand VMs per lane, far short of the
+5.56M-request Azure Packing2020 trace the paper evaluates on.  This
+package replays the same event stream in fixed-geometry chunks against
+the same carried state:
+
+  * ``events``  - request sources (in-memory instances, the streaming
+    Azure CSV reader) and :class:`~repro.stream.events.ChunkedWorkload`,
+    the host-side merge/pool builder.
+  * ``replay``  - :func:`~repro.stream.replay.replay_stream`, the jitted
+    chunk driver with double-buffered prefetch staging, and
+    ``replay_chunked_events`` for pre-materialized event arrays.
+
+Results are bit-identical to ``core.jaxsim.simulate`` on the
+materialized instance (tests/test_stream.py); memory is O(max alive VMs),
+independent of trace length.
+"""
+from .events import (ChunkedWorkload, CsvSource, EventChunk,
+                     InstanceSource, POOL_SENTINEL, StreamMeta,
+                     chunk_instance_events, synthetic_source)
+from .replay import (StreamResult, replay_chunked_events, replay_stream)
+
+__all__ = [
+    "ChunkedWorkload", "CsvSource", "EventChunk", "InstanceSource",
+    "POOL_SENTINEL", "StreamMeta", "StreamResult",
+    "chunk_instance_events", "replay_chunked_events", "replay_stream",
+    "synthetic_source",
+]

@@ -16,6 +16,9 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
 
 from .grid import PredModel, SuiteSpec, SweepSpec, run_sweep, summarize_sweep
 from .store import SweepStore
@@ -89,7 +92,57 @@ def main(argv=None, prog: str = "python -m repro sweep") -> None:
                          "checkpoint")
     ap.add_argument("--checkpoint-every", type=int, default=2048,
                     help="events between checkpoint snapshots")
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="launch N worker processes, each running a "
+                         "1/N slice of the (suite, pred, policy, "
+                         "consolidation) grid against the shared store "
+                         "(journal-merged; the final records equal a "
+                         "single-process run)")
+    ap.add_argument("--host-index", type=int, default=None,
+                    help="run only this host's grid slice (normally set "
+                         "by --hosts, or via REPRO_HOST_INDEX)")
+    ap.add_argument("--host-count", type=int, default=None,
+                    help="total hosts sharding the grid (with "
+                         "--host-index, or via REPRO_HOST_COUNT)")
     args = ap.parse_args(argv)
+
+    if args.hosts and args.hosts > 1:
+        # process-per-host launcher: re-exec this CLI once per slice with
+        # the slice pinned via environment, then let the store's
+        # journal+lock merging produce the single combined record set
+        if args.no_store:
+            raise SystemExit("--hosts needs a store to merge results into")
+        base, skip = [], False
+        for a in (argv if argv is not None else sys.argv[1:]):
+            if skip:
+                skip = False
+                continue
+            if a == "--hosts":
+                skip = True
+                continue
+            if a.startswith("--hosts="):
+                continue
+            base.append(a)
+        procs = []
+        for i in range(args.hosts):
+            env = dict(os.environ, REPRO_HOST_INDEX=str(i),
+                       REPRO_HOST_COUNT=str(args.hosts))
+            procs.append(subprocess.Popen(
+                [sys.executable, "-m", "repro", "sweep"] + base, env=env))
+        rcs = [p.wait() for p in procs]
+        if any(rcs):
+            raise SystemExit(f"worker processes failed: rc={rcs}")
+        # fall through host-free: every group is now cached, so the parent
+        # re-runs the grid as pure store reads and prints the merged
+        # summary (workers already honored --force on their slices)
+        args = ap.parse_args(base)
+        args.force = False
+
+    host_index = args.host_index if args.host_index is not None else \
+        int(os.environ.get("REPRO_HOST_INDEX", "0"))
+    host_count = args.host_count if args.host_count is not None else \
+        (int(os.environ["REPRO_HOST_COUNT"])
+         if "REPRO_HOST_COUNT" in os.environ else None)
 
     policies = tuple(SCAN_POLICIES) if args.policies == "all" else \
         tuple(args.policies.split(","))
@@ -109,16 +162,17 @@ def main(argv=None, prog: str = "python -m repro sweep") -> None:
     store = None if args.no_store else SweepStore(args.store)
     ckpt_dir = args.checkpoint_dir
     if args.resume and ckpt_dir is None:
-        import os
         ckpt_dir = os.path.join(args.store, "checkpoints")
-    print(f"# sweep {spec.spec_hash()} -> "
+    who = f" host {host_index}/{host_count}" if host_count else ""
+    print(f"# sweep {spec.spec_hash()}{who} -> "
           f"{store.path(spec) if store else '(not stored)'}")
     records = run_sweep(spec, store=store, force=args.force,
                         progress=lambda m: print(f"# {m}", flush=True),
                         backend=args.backend, shard=args.shard,
                         block_events=args.block_events,
                         checkpoint_dir=ckpt_dir,
-                        checkpoint_every=args.checkpoint_every)
+                        checkpoint_every=args.checkpoint_every,
+                        host_index=host_index, host_count=host_count)
 
     print(f"{'policy':<18} {'pred':<14} {'n':>4} {'mean':>8} {'median':>8} "
           f"{'q1':>8} {'q3':>8}")

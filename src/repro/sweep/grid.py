@@ -235,7 +235,9 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
               trace_level: int = 0,
               traces: Optional[Dict] = None,
               checkpoint_dir: Optional[str] = None,
-              checkpoint_every: int = 2048) -> Dict[str, Dict]:
+              checkpoint_every: int = 2048,
+              host_index: Optional[int] = None,
+              host_count: Optional[int] = None) -> Dict[str, Dict]:
     """Expand and run the grid; returns {result_key: record}.
 
     ``backend`` / ``shard`` / ``block_events`` pick the replay engine, lane
@@ -259,6 +261,16 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
     *current* group resumable too.  The CLI's ``--resume`` is sugar for
     a checkpoint dir next to the store.
 
+    ``host_index`` / ``host_count`` shard the grid across processes: every
+    host enumerates the identical (suite, pred, policy, consolidation)
+    cell sequence and runs only cells with ``cell_no % host_count ==
+    host_index``.  Each host journals its groups into the shared store
+    (``SweepStore`` merges under an exclusive lock), so N partial runs
+    converge to exactly the single-process record set - the
+    ``python -m repro sweep --hosts N`` launcher is sugar for N such
+    processes.  Results are per-cell independent, so the partition never
+    changes them.
+
     record schema (also persisted by SweepStore, see sweep/README.md):
       usage_time, lower_bound, ratio, n_bins_opened, overflowed, max_bins,
       suite, instance, policy, pred, seed
@@ -277,23 +289,34 @@ def run_sweep(spec: SweepSpec, store=None, force: bool = False,
         ckpt = ReplayCheckpointer(checkpoint_dir,
                                   every_events=checkpoint_every)
 
+    if host_count is not None:
+        host_count = int(host_count)
+        host_index = int(host_index or 0)
+        assert 0 <= host_index < host_count, (host_index, host_count)
+
     records: Dict[str, Dict] = {}
     if store is not None and not force:
         with obs.span("store.load", spec=spec.suites_hash()):
             records.update(store.load(spec))
         obs.counter_add("store.load")
 
+    cell_no = -1   # global cell counter: identical on every host
     for suite in spec.suites:
         insts = lbs = batch = None   # built lazily: cached suites stay free
         for pred in spec.predictions:
             seeds = tuple(spec.seeds) if pred.noisy else (spec.seeds[0],)
             cells = [(p, cons) for p in spec.policies
                      for cons in spec.consolidations]
-            todo = [(p, cons) for p, cons in cells
+            mine = []
+            for c in cells:
+                cell_no += 1
+                if host_count is None or cell_no % host_count == host_index:
+                    mine.append(c)
+            todo = [(p, cons) for p, cons in mine
                     if trace_level
                     or not _group_cached(records, suite, p, pred, seeds,
                                          cons)]
-            for p, cons in cells:
+            for p, cons in mine:
                 if (p, cons) not in todo:
                     say(f"skip {suite.label()}/{_cell_label(p, cons)}/"
                         f"{pred.label()} (cached)")

@@ -183,8 +183,13 @@ def _run_arrays(arrays, *, policy: str, max_bins: int, backend: str,
     L = B * S
     pad = (-L) % ndev
     if pad:
-        reps = -(-pad // L)   # ceil: enough copies even when pad > L
-        flat = tuple(jnp.concatenate([a] + [a] * reps, axis=0)[:L + pad]
+        # wrap-around replication: tile whole copies of the lane axis up
+        # to the padded length, then slice - exact even when the device
+        # count dwarfs the lane count (pad > L needs ceil(total/L) > 2
+        # copies; tests/test_stream.py pins ndev > 2L)
+        total = L + pad
+        reps = -(-total // L)
+        flat = tuple(jnp.concatenate([a] * reps, axis=0)[:total]
                      for a in flat)
     u, o, ov = _simulate_batch_sharded(*flat, policy=policy,
                                        max_bins=max_bins, backend=backend,

@@ -32,16 +32,31 @@ the run):
     journal records over the main blob, skipping torn tail lines
     (``store.journal_skipped``).
 
+Multi-process safety (the ``--hosts`` launcher runs N sweep processes
+against one store): ``save`` holds an exclusive ``flock`` on a ``.lock``
+sidecar for the journal-append + main-rewrite critical section, and
+rewrites the main blob as *on-disk state merged with this process's
+records* rather than this process's view alone - so concurrent hosts
+never clobber each other's groups, and the final file equals the
+single-process result set.  Readers stay lock-free: the main file is
+only ever atomically replaced, and torn journal tails are skipped.
+
 Schema 1 files (no checksum, no journal) still load.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
 import tempfile
 import warnings
 from typing import Dict, Optional
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: single-process stores still work
+    fcntl = None
 
 from .. import obs
 from ..resilience import faults
@@ -135,6 +150,21 @@ class SweepStore:
 
     # ------------------------------------------------------------- save
 
+    @contextlib.contextmanager
+    def _locked(self, spec: SweepSpec):
+        """Exclusive inter-process lock for the save critical section (a
+        ``.lock`` sidecar never replaced, so the inode is stable)."""
+        os.makedirs(self.root, exist_ok=True)
+        if fcntl is None:
+            yield
+            return
+        with open(self.path(spec) + ".lock", "a") as lf:
+            fcntl.flock(lf, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lf, fcntl.LOCK_UN)
+
     def _append_journal(self, spec: SweepSpec,
                         group_records: Dict[str, Dict]) -> None:
         jpath = self.journal_path(spec)
@@ -150,24 +180,32 @@ class SweepStore:
              group_records: Optional[Dict[str, Dict]] = None) -> str:
         path = self.path(spec)
         os.makedirs(self.root, exist_ok=True)
-        if group_records:
-            # journal BEFORE the main rewrite: the delta survives a crash
-            # at any point of the rewrite
-            self._append_journal(spec, group_records)
-        blob = {"schema": SCHEMA_VERSION, "suites_hash": spec.suites_hash(),
-                "checksum": _records_sha(results),
-                "spec": spec.canonical(), "results": results}
-        # atomic replace so an interrupted sweep never corrupts the file
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(blob, f, indent=1, sort_keys=True)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, path)
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
+        with self._locked(spec):
+            if group_records:
+                # journal BEFORE the main rewrite: the delta survives a
+                # crash at any point of the rewrite
+                self._append_journal(spec, group_records)
+            # merge over what is on disk, not over this process's view:
+            # concurrent hosts interleave saves, and each must preserve
+            # the groups the others have already landed
+            merged = self._load_main(spec)
+            merged.update(self._load_journal(spec))
+            merged.update(results)
+            blob = {"schema": SCHEMA_VERSION,
+                    "suites_hash": spec.suites_hash(),
+                    "checksum": _records_sha(merged),
+                    "spec": spec.canonical(), "results": merged}
+            # atomic replace so an interrupted sweep never corrupts it
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(blob, f, indent=1, sort_keys=True)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path)
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
         # seam AFTER the replace: the "truncate" fault kind corrupts the
         # file just written, exactly like a torn write
         faults.fire("store.save", path=path)

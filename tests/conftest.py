@@ -1,4 +1,32 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# jax caches every compiled executable for the life of the process, and on
+# CPU each one pins mmapped code + constant buffers.  A full tier-1 run now
+# compiles enough distinct traces to cross the kernel's vm.max_map_count
+# ceiling (65530 by default), at which point the NEXT XLA compile fails an
+# mmap and segfaults.  Dropping the caches between modules once map
+# pressure builds keeps the process far from the cliff while preserving
+# cross-module cache reuse on the common path.
+_MAPS_RELIEF_THRESHOLD = 20_000
+
+
+def _n_maps():
+    try:
+        with open(f"/proc/{os.getpid()}/maps") as fh:
+            return sum(1 for _ in fh)
+    except OSError:  # non-linux: no /proc, no known map ceiling either
+        return 0
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _jax_map_pressure_relief():
+    yield
+    if _n_maps() > _MAPS_RELIEF_THRESHOLD:
+        import jax
+
+        jax.clear_caches()

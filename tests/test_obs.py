@@ -121,8 +121,14 @@ def test_timeit_stats_and_row():
     assert parsed["reps"] == 4
     assert parsed["us_per_call"] == pytest.approx(st.best * 0.5e6, abs=0.1)
     assert parsed["median_us"] == pytest.approx(st.median * 0.5e6, abs=0.1)
-    # plain rows (no spread comment) still parse without the extras
-    assert "median_us" not in _parse_row("perf/y,12,0.5")
+    # one-shot rows (no spread comment) normalize to the same schema:
+    # median_us == us_per_call, stdev 0, one rep
+    plain = _parse_row("perf/y,12,0.5")
+    assert plain["median_us"] == 12.0
+    assert plain["stdev_us"] == 0.0 and plain["reps"] == 1
+    # CPU-interpret Pallas rows carry the mode tag off the comment token
+    assert _parse_row("perf/z,3,1  # mode=interpret")["mode"] == "interpret"
+    assert "mode" not in plain
 
 
 def test_kind_constants_match_kernel():
